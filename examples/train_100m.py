@@ -1,0 +1,78 @@
+"""End-to-end training driver: a ~100M-param qwen3-family model for a few
+hundred steps on synthetic bigram data (loss must drop).
+
+  PYTHONPATH=src python examples/train_100m.py --steps 200
+
+This is the full substrate working together: data pipeline -> pattern-
+scanned model -> chunked loss -> AdamW -> checkpoint.
+"""
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import DataConfig, TokenPipeline
+from repro.models import LayerSpec, Model, ModelConfig
+from repro.train.checkpoint import save_checkpoint
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+def model_100m() -> ModelConfig:
+    """~100M params: 12L d=768 (GPT-2-small-scale qwen3-style)."""
+    return ModelConfig(
+        name="qwen3-100m", arch_type="dense", d_model=768, n_heads=12,
+        n_kv_heads=4, d_ff=2048, vocab=8192,
+        pattern=(LayerSpec("attn", "mlp"),), n_repeats=12,
+        qk_norm=True, tie_embeddings=True, dtype="float32",
+    )
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    args = ap.parse_args(argv)
+
+    cfg = model_100m()
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    print(f"model: {cfg.name}  params={n_params/1e6:.1f}M")
+
+    opt_cfg = AdamWConfig(lr=6e-4, warmup_steps=20, total_steps=args.steps)
+    opt_state = init_opt_state(params)
+    data = TokenPipeline(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                                    global_batch=args.batch))
+
+    @jax.jit
+    def step_fn(params, opt_state, tokens, labels):
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss(p, tokens, labels)
+        )(params)
+        params, opt_state, metrics = adamw_update(opt_cfg, params, grads, opt_state)
+        return params, opt_state, loss, metrics
+
+    losses = []
+    for step, (tokens, labels) in enumerate(data):
+        if step >= args.steps:
+            break
+        params, opt_state, loss, metrics = step_fn(
+            params, opt_state, jnp.asarray(tokens), jnp.asarray(labels)
+        )
+        losses.append(float(loss))
+        if step % 20 == 0 or step == args.steps - 1:
+            print(f"step {step:4d}  loss {float(loss):.4f}  "
+                  f"lr {float(metrics['lr']):.2e}")
+    first = sum(losses[:10]) / min(10, len(losses))
+    last = sum(losses[-10:]) / min(10, len(losses))
+    print(f"\nloss: first-10 {first:.4f} -> last-10 {last:.4f}")
+    assert last < first, "training failed to reduce loss"
+    save_checkpoint(args.ckpt_dir, args.steps, params)
+    print(f"checkpoint saved -> {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

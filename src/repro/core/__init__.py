@@ -1,0 +1,81 @@
+"""RTGPU core: the paper's scheduling contribution as a composable library.
+
+Layers (bottom-up):
+  task.py        task model (Eq. 4) + Lemma 5.1 GPU response bounds
+  workload.py    multi-segment self-suspension workload functions
+                 (Lemmas 2.1 / 5.2 / 5.4) via generic resource views
+  rta.py         fixed-point response-time analysis + Theorem 5.6
+  federated.py   Algorithm 2 grid search / greedy allocation
+  baselines.py   STGM busy-waiting and self-suspension baselines
+  generator.py   Table 1 synthetic taskset generation
+  interleave.py  virtual-SM model, Fig. 6 ratios, Eqs. 9-10
+  jax_rta.py     vmapped JAX batch schedulability (fast path)
+"""
+from .task import GpuSegment, RTTask, SegmentKind, TaskSet, gpu_response_bounds
+from .workload import (
+    ResourceView,
+    cpu_view,
+    max_workload,
+    mem_view,
+    suspension_oblivious_view,
+    workload_fn,
+)
+from .rta import (
+    SetAnalysis,
+    TaskAnalysis,
+    analyze_rtgpu,
+    analyze_rtgpu_plus,
+    fixed_point,
+)
+from .federated import (
+    FederatedResult,
+    greedy_search,
+    grid_search,
+    iter_allocations,
+    min_viable_alloc,
+    schedule,
+)
+from .baselines import analyze_self_suspension, analyze_stgm
+from .generator import GeneratorConfig, generate_taskset, generate_tasksets
+from .interleave import (
+    INTERLEAVE_RATIO_MAX,
+    KERNEL_TYPES,
+    VirtualSMModel,
+    throughput_gain_total,
+    throughput_gain_used,
+)
+
+__all__ = [
+    "GpuSegment",
+    "RTTask",
+    "SegmentKind",
+    "TaskSet",
+    "gpu_response_bounds",
+    "ResourceView",
+    "cpu_view",
+    "mem_view",
+    "suspension_oblivious_view",
+    "workload_fn",
+    "max_workload",
+    "SetAnalysis",
+    "TaskAnalysis",
+    "analyze_rtgpu",
+    "analyze_rtgpu_plus",
+    "fixed_point",
+    "FederatedResult",
+    "grid_search",
+    "greedy_search",
+    "schedule",
+    "iter_allocations",
+    "min_viable_alloc",
+    "analyze_stgm",
+    "analyze_self_suspension",
+    "GeneratorConfig",
+    "generate_taskset",
+    "generate_tasksets",
+    "INTERLEAVE_RATIO_MAX",
+    "KERNEL_TYPES",
+    "VirtualSMModel",
+    "throughput_gain_total",
+    "throughput_gain_used",
+]

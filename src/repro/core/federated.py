@@ -1,0 +1,208 @@
+"""Algorithm 2: grid-searched federated virtual-SM allocation.
+
+Enumerates allocations GN_i >= 1 with sum <= GN (the paper's nested loops),
+running the RTGPU schedulability analysis per candidate, plus the greedy
+variant mentioned in §5.5.
+
+Two structural accelerations (results identical to the brute force):
+  * **minimum viable allocation**: each task needs GN_i large enough that its
+    isolated best-case span fits its deadline — loops start there;
+  * **prefix DFS**: under RTGPU, task k's schedulability depends only on
+    ``alloc[0..k]`` (see rta.RtgpuIncremental), so the nested loops test task
+    k at depth k and prune entire subtrees on the first failing prefix.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Iterator, Optional, Sequence
+
+from .rta import (
+    RtgpuIncremental,
+    SetAnalysis,
+    TaskAnalysis,
+    analyze_rtgpu,
+    analyze_rtgpu_plus,
+)
+from .task import TaskSet
+
+__all__ = [
+    "FederatedResult",
+    "min_viable_alloc",
+    "iter_allocations",
+    "grid_search",
+    "grid_search_dfs",
+    "greedy_search",
+    "schedule",
+]
+
+Analyzer = Callable[[TaskSet, Sequence[int]], SetAnalysis]
+
+
+@dataclasses.dataclass(frozen=True)
+class FederatedResult:
+    schedulable: bool
+    alloc: Optional[tuple[int, ...]]
+    analysis: Optional[SetAnalysis]
+    candidates_tried: int
+
+
+def min_viable_alloc(taskset: TaskSet, gn_total: int) -> Optional[list[int]]:
+    """Per-task minimum GN_i such that the task fits its deadline in isolation.
+
+    Necessary condition:  Σ CL̆ + Σ ML̆ + Σ GR̆(2GN_i) ≤ D_i.  Returns None
+    when even GN_i = GN does not fit (set is trivially unschedulable).
+    """
+    mins: list[int] = []
+    for task in taskset:
+        lo = None
+        for gn in range(1, gn_total + 1):
+            if task.min_span(2 * gn) <= task.deadline:
+                lo = gn
+                break
+        if lo is None:
+            return None
+        mins.append(lo)
+    if sum(mins) > gn_total:
+        return None
+    return mins
+
+
+def iter_allocations(
+    mins: Sequence[int], gn_total: int
+) -> Iterator[tuple[int, ...]]:
+    """All allocations with alloc[i] >= mins[i] and sum(alloc) <= gn_total,
+    in the paper's lexicographic nested-loop order."""
+    n = len(mins)
+
+    def rec(i: int, remaining: int, prefix: tuple[int, ...]) -> Iterator[tuple[int, ...]]:
+        if i == n:
+            yield prefix
+            return
+        tail_min = sum(mins[i + 1 :])
+        for g in range(mins[i], remaining - tail_min + 1):
+            yield from rec(i + 1, remaining - g, prefix + (g,))
+
+    yield from rec(0, gn_total, ())
+
+
+def grid_search_dfs(
+    taskset: TaskSet,
+    gn_total: int,
+    tightened: bool = False,
+    max_nodes: int = 1_000_000,
+) -> FederatedResult:
+    """Algorithm 2 for the RTGPU analysis, with prefix pruning.
+
+    Visits candidate allocations in the same lexicographic order as the
+    paper's nested loops and returns the same first success, but evaluates
+    task k as soon as ``alloc[0..k]`` is fixed."""
+    n = len(taskset)
+    mins = min_viable_alloc(taskset, gn_total)
+    if mins is None:
+        return FederatedResult(False, None, None, 0)
+    inc = RtgpuIncremental(taskset, tightened=tightened)
+    tried = 0
+    found: list[TaskAnalysis] = []
+
+    def dfs(k: int, remaining: int, prefix: tuple[int, ...]) -> Optional[tuple[int, ...]]:
+        nonlocal tried
+        tail_min = sum(mins[k + 1 :])
+        for g in range(mins[k], remaining - tail_min + 1):
+            if tried >= max_nodes:
+                return None
+            tried += 1
+            ta = inc.analyze_task(k, prefix + (g,))
+            if not ta.schedulable:
+                continue
+            if k == n - 1:
+                found.append(ta)
+                return prefix + (g,)
+            found.append(ta)
+            sub = dfs(k + 1, remaining - g, prefix + (g,))
+            if sub is not None:
+                return sub
+            found.pop()
+        return None
+
+    alloc = dfs(0, gn_total, ())
+    if alloc is None:
+        return FederatedResult(False, None, None, tried)
+    return FederatedResult(True, alloc, SetAnalysis(tuple(found)), tried)
+
+
+def grid_search(
+    taskset: TaskSet,
+    gn_total: int,
+    analyzer: Analyzer = analyze_rtgpu,
+    max_candidates: int = 1_000_000,
+) -> FederatedResult:
+    """Algorithm 2 brute force for an arbitrary analyzer (used by baselines)."""
+    if analyzer is analyze_rtgpu:
+        return grid_search_dfs(taskset, gn_total, max_nodes=max_candidates)
+    if analyzer is analyze_rtgpu_plus:
+        return grid_search_dfs(
+            taskset, gn_total, tightened=True, max_nodes=max_candidates
+        )
+    mins = min_viable_alloc(taskset, gn_total)
+    if mins is None:
+        return FederatedResult(False, None, None, 0)
+    tried = 0
+    for alloc in iter_allocations(mins, gn_total):
+        tried += 1
+        if tried > max_candidates:
+            break
+        analysis = analyzer(taskset, alloc)
+        if analysis.schedulable:
+            return FederatedResult(True, alloc, analysis, tried)
+    return FederatedResult(False, None, None, tried)
+
+
+def greedy_search(
+    taskset: TaskSet,
+    gn_total: int,
+    analyzer: Analyzer = analyze_rtgpu,
+) -> FederatedResult:
+    """The paper's greedy alternative: start from the minimum viable
+    allocation, repeatedly give one more SM to the task with the worst
+    R̂/D ratio."""
+    mins = min_viable_alloc(taskset, gn_total)
+    if mins is None:
+        return FederatedResult(False, None, None, 0)
+    alloc = list(mins)
+    tried = 0
+    while True:
+        tried += 1
+        analysis = analyzer(taskset, alloc)
+        if analysis.schedulable:
+            return FederatedResult(True, tuple(alloc), analysis, tried)
+        if sum(alloc) >= gn_total:
+            return FederatedResult(False, None, None, tried)
+        worst, worst_key = None, 1.0
+        for i, ta in enumerate(analysis.tasks):
+            ratio = ta.response / ta.deadline if math.isfinite(ta.response) else math.inf
+            if ratio > worst_key or (worst is None and ratio > 1.0):
+                worst, worst_key = i, ratio
+        if worst is None:
+            return FederatedResult(False, None, None, tried)
+        alloc[worst] += 1
+
+
+def schedule(
+    taskset: TaskSet,
+    gn_total: int,
+    analyzer: Analyzer = analyze_rtgpu,
+    mode: str = "grid",
+    max_candidates: int = 1_000_000,
+) -> FederatedResult:
+    """Entry point used by the runtime admission controller."""
+    if mode == "grid":
+        return grid_search(taskset, gn_total, analyzer, max_candidates)
+    if mode == "greedy":
+        return greedy_search(taskset, gn_total, analyzer)
+    if mode == "greedy+grid":
+        res = greedy_search(taskset, gn_total, analyzer)
+        if res.schedulable:
+            return res
+        return grid_search(taskset, gn_total, analyzer, max_candidates)
+    raise ValueError(f"unknown mode {mode!r}")

@@ -1,0 +1,124 @@
+"""Synthetic taskset generation (paper §6.1, Table 1).
+
+Procedure reproduced verbatim:
+  1. draw per-task utilization U_i ~ Uniform, normalize to the target ΣU;
+  2. draw CPU / memory / GPU segment lengths uniformly in their ranges
+     (CPU [1,20] ms, mem [1,5] ms, GPU [1,20] ms by default; the ratio
+     sweeps of Fig. 8 rescale mem/GPU ranges);
+  3. D_i = (Σ CL̂ + Σ ML̂ + Σ GL̂) / U_i ;  T_i = D_i  (implicit deadline);
+  4. deadline-monotonic priority assignment;
+  5. GPU kernel-launch overhead ε = 12 % of the segment length; interleave
+     ratio α per segment drawn from the Fig. 6 kernel-type maxima.
+
+Execution-time *lower* bounds (the carons) use a variability knob:
+``lo = hi * (1 - variability)``; variability=0 reproduces the
+worst-case-execution-time model of Fig. 12, a positive value the
+average-vs-worst gap of Fig. 13.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from .interleave import INTERLEAVE_RATIO_MAX, KERNEL_TYPES
+from .task import GpuSegment, RTTask, TaskSet
+
+__all__ = ["GeneratorConfig", "generate_taskset", "generate_tasksets"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GeneratorConfig:
+    """Table 1 defaults."""
+
+    n_tasks: int = 5                     # N
+    n_subtasks: int = 5                  # M -> m_i CPU segments per task
+    cpu_range: tuple[float, float] = (1.0, 20.0)   # ms
+    mem_range: tuple[float, float] = (1.0, 5.0)    # ms
+    gpu_range: tuple[float, float] = (1.0, 20.0)   # ms (work at 1 SM)
+    launch_overhead: float = 0.12        # ε: GL̂ = ε * GŴ
+    copies: int = 2                      # 2-copy (Eq. 4) or combined 1-copy
+    variability: float = 0.0             # lo = hi * (1 - variability)
+    interleave: bool = True              # α per Fig. 6; 1.0 when disabled
+
+    def scaled(self, cpu_mem_gpu_ratio: tuple[float, float, float]) -> "GeneratorConfig":
+        """Rescale mem/GPU ranges relative to CPU, for the Fig. 8 sweeps.
+
+        Ratio (a, b, c) keeps the CPU range and sets mem/GPU ranges to
+        (b/a), (c/a) times it."""
+        a, b, c = cpu_mem_gpu_ratio
+        lo, hi = self.cpu_range
+        return dataclasses.replace(
+            self,
+            mem_range=(lo * b / a, hi * b / a),
+            gpu_range=(lo * c / a, hi * c / a),
+        )
+
+
+def _uniform_utils(rng: np.random.Generator, n: int, total: float) -> np.ndarray:
+    u = rng.uniform(0.1, 1.0, size=n)
+    return u / u.sum() * total
+
+
+def generate_taskset(
+    rng: np.random.Generator,
+    total_util: float,
+    config: GeneratorConfig = GeneratorConfig(),
+) -> TaskSet:
+    """One taskset at the given total utilization (paper normalization: one
+    CPU + one bus + one SM fully busy <=> U = 1)."""
+    utils = _uniform_utils(rng, config.n_tasks, total_util)
+    tasks: list[RTTask] = []
+    for i in range(config.n_tasks):
+        m = config.n_subtasks
+        cpu_hi = rng.uniform(*config.cpu_range, size=m)
+        gpu_hi = rng.uniform(*config.gpu_range, size=m - 1)
+        n_mem = config.copies * (m - 1)
+        mem_hi = rng.uniform(*config.mem_range, size=n_mem)
+
+        v = config.variability
+        cpu_lo = cpu_hi * (1.0 - v)
+        mem_lo = mem_hi * (1.0 - v)
+        gpu_lo = gpu_hi * (1.0 - v)
+
+        segs = []
+        for j in range(m - 1):
+            ktype = KERNEL_TYPES[int(rng.integers(len(KERNEL_TYPES)))]
+            alpha = INTERLEAVE_RATIO_MAX[ktype] if config.interleave else 1.0
+            segs.append(
+                GpuSegment(
+                    work_lo=float(gpu_lo[j]),
+                    work_hi=float(gpu_hi[j]),
+                    overhead_hi=float(config.launch_overhead * gpu_hi[j]),
+                    alpha=float(alpha),
+                )
+            )
+
+        # D_i = (Σ CL̂ + Σ ML̂ + Σ GL̂)/U_i with GL̂ the GPU segment length.
+        span = float(cpu_hi.sum() + mem_hi.sum() + gpu_hi.sum())
+        deadline = span / float(utils[i])
+        tasks.append(
+            RTTask(
+                cpu_lo=tuple(cpu_lo),
+                cpu_hi=tuple(cpu_hi),
+                mem_lo=tuple(mem_lo),
+                mem_hi=tuple(mem_hi),
+                gpu=tuple(segs),
+                deadline=deadline,
+                period=deadline,
+                copies=config.copies,
+                name=f"tau{i}",
+            )
+        )
+    return TaskSet.deadline_monotonic(tasks)
+
+
+def generate_tasksets(
+    seed: int,
+    total_util: float,
+    n_sets: int,
+    config: GeneratorConfig = GeneratorConfig(),
+) -> list[TaskSet]:
+    rng = np.random.default_rng(seed)
+    return [generate_taskset(rng, total_util, config) for _ in range(n_sets)]

@@ -1,0 +1,246 @@
+"""RTGPU response-time analysis (paper §5.2–§5.5).
+
+Federated scheduling on virtual SMs (Lemma 5.1) + fixed-priority scheduling
+of the non-preemptive bus (Lemmas 5.2/5.3) and the preemptive uniprocessor
+(Lemmas 5.4/5.5), combined into the end-to-end bound of Theorem 5.6.
+
+Two entry points:
+  * ``analyze_rtgpu(taskset, alloc)`` — one-shot analysis of an allocation.
+  * ``RtgpuIncremental`` — per-task incremental analysis used by the
+    grid-search DFS in federated.py.  Key structural fact it exploits:
+    under RTGPU, task k's schedulability depends only on ``alloc[0..k]``
+    (GPU segments are dedicated; bus/CPU interference comes from
+    higher-priority tasks; bus blocking uses lower-priority ML̂ only,
+    which is allocation-independent).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Sequence
+
+from .task import RTTask, TaskSet
+from .workload import ViewTables, cpu_view, mem_view
+
+__all__ = [
+    "fixed_point",
+    "TaskAnalysis",
+    "SetAnalysis",
+    "analyze_rtgpu",
+    "analyze_rtgpu_plus",
+    "RtgpuIncremental",
+]
+
+_INF = math.inf
+_EPS = 1e-9
+
+
+def fixed_point(
+    base: float,
+    interference: Callable[[float], float],
+    limit: float,
+    max_iters: int = 10_000,
+) -> float:
+    """Smallest fixed point of  x = base + interference(x)  (≤ limit).
+
+    ``interference`` must be monotonically non-decreasing; iterating from
+    ``base`` converges to the least fixed point.  Returns ``inf`` once the
+    iterate exceeds ``limit`` (the paper only needs R̂ ≤ D)."""
+    if base > limit:
+        return _INF
+    x = base
+    for _ in range(max_iters):
+        nx = base + interference(x)
+        if nx > limit:
+            return _INF
+        if nx <= x + _EPS:
+            return nx
+        x = nx
+    return _INF
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskAnalysis:
+    """Analysis products for one task under one allocation."""
+
+    name: str
+    n_vsm: int
+    gpu_resp_lo: tuple[float, ...]
+    gpu_resp_hi: tuple[float, ...]
+    mem_resp_hi: tuple[float, ...]
+    cpu_resp_hi: tuple[float, ...]
+    r1: float
+    r2: float
+    deadline: float
+
+    @property
+    def response(self) -> float:
+        """Theorem 5.6: R̂ = min(R̂1, R̂2)."""
+        return min(self.r1, self.r2)
+
+    @property
+    def schedulable(self) -> bool:
+        """Corollary 5.6.1."""
+        return self.response <= self.deadline + 1e-6
+
+
+@dataclasses.dataclass(frozen=True)
+class SetAnalysis:
+    tasks: tuple[TaskAnalysis, ...]
+
+    @property
+    def schedulable(self) -> bool:
+        return all(t.schedulable for t in self.tasks)
+
+    @property
+    def responses(self) -> tuple[float, ...]:
+        return tuple(t.response for t in self.tasks)
+
+
+class RtgpuIncremental:
+    """Incremental per-task RTGPU analysis with (task, GN) view caching.
+
+    ``tightened=False`` (default) reproduces the paper's Theorem 5.6
+    verbatim: R̂ = min(R̂1, R̂2).
+
+    ``tightened=True`` additionally computes a sound beyond-paper bound R̂3
+    and returns R̂ = min(R̂1, R̂2, R̂3).  Eq. 8's Σ MR̂ term charges every
+    memory copy a *separate* worst-case bus-interference window; R̂3 instead
+    bounds total bus interference jointly over the task's whole response
+    window:  any higher-priority bus execution that delays one of our copies
+    lies inside the end-to-end window, so its total is at most
+    Σ_{hp} max_h MW_i^h(R̂3), and non-preemptive blocking is at most one
+    lower-priority copy per own copy.  Hence
+
+      R̂3 = Σ GR̂ + Σ ML̂ + Σ CL̂ + (2m−2)·B
+            + Σ_{hp} max_h MW_i^h(R̂3) + Σ_{hp} max_h CW_i^h(R̂3)
+
+    which is never looser than Eq. 8 (workload staircases are subadditive
+    over window splits).  See EXPERIMENTS.md §Perf for the effect.
+    """
+
+    def __init__(self, taskset: TaskSet, tightened: bool = False):
+        self.taskset = taskset
+        self.tightened = tightened
+        n = len(taskset)
+        # Bus blocking for task k: longest lower-priority copy (alloc-free).
+        self._blocking = []
+        for k in range(n):
+            b = 0.0
+            for i in range(k + 1, n):
+                if taskset[i].n_mem:
+                    b = max(b, max(taskset[i].mem_hi))
+            self._blocking.append(b)
+        self._mem_tables: dict[tuple[int, int], ViewTables] = {}
+        self._cpu_tables: dict[tuple[int, int], ViewTables] = {}
+
+    def mem_tables(self, i: int, gn: int) -> ViewTables:
+        key = (i, gn)
+        if key not in self._mem_tables:
+            self._mem_tables[key] = ViewTables(mem_view(self.taskset[i], 2 * gn))
+        return self._mem_tables[key]
+
+    def cpu_tables(self, i: int, gn: int) -> ViewTables:
+        key = (i, gn)
+        if key not in self._cpu_tables:
+            self._cpu_tables[key] = ViewTables(cpu_view(self.taskset[i], 2 * gn))
+        return self._cpu_tables[key]
+
+    def analyze_task(self, k: int, alloc_prefix: Sequence[int]) -> TaskAnalysis:
+        """Analyze task k given allocations for tasks 0..k (inclusive)."""
+        if len(alloc_prefix) < k + 1:
+            raise ValueError("need allocations for tasks 0..k")
+        task = self.taskset[k]
+        n_vsm = 2 * alloc_prefix[k]
+        limit = task.deadline
+
+        # GPU: dedicated federated units — Lemma 5.1.
+        bounds = [g.response_bounds(n_vsm) for g in task.gpu]
+        gpu_lo = tuple(b[0] for b in bounds)
+        gpu_hi = tuple(b[1] for b in bounds)
+
+        hp_mem = [
+            self.mem_tables(i, alloc_prefix[i])
+            for i in range(k)
+            if self.taskset[i].n_mem
+        ]
+        hp_cpu = [self.cpu_tables(i, alloc_prefix[i]) for i in range(k)]
+        blocking = self._blocking[k]
+
+        # Bus (Lemma 5.3): non-preemptive fixed priority with blocking.
+        def interf_m(t: float) -> float:
+            return sum(tb.max_workload(t) for tb in hp_mem) + blocking
+
+        mem_resp = [fixed_point(task.mem_hi[j], interf_m, limit) for j in range(task.n_mem)]
+
+        # CPU (Lemma 5.5): preemptive fixed priority.
+        def interf_c(t: float) -> float:
+            return sum(tb.max_workload(t) for tb in hp_cpu)
+
+        cpu_resp = [fixed_point(task.cpu_hi[j], interf_c, limit) for j in range(task.m)]
+
+        # End to end (Theorem 5.6).
+        if any(map(math.isinf, mem_resp)) or any(map(math.isinf, cpu_resp)):
+            r1 = _INF
+        else:
+            r1 = sum(gpu_hi) + sum(mem_resp) + sum(cpu_resp)
+
+        if any(map(math.isinf, mem_resp)):
+            r2 = _INF
+        else:
+            base2 = sum(gpu_hi) + sum(mem_resp) + task.cpu_total_hi()
+            r2 = fixed_point(base2, interf_c, limit)
+
+        if self.tightened:
+            # Beyond-paper R̂3: joint bus+CPU interference over one window.
+            base3 = (
+                sum(gpu_hi)
+                + task.mem_total_hi()
+                + task.cpu_total_hi()
+                + task.n_mem * blocking
+            )
+
+            def interf_joint(t: float) -> float:
+                return sum(tb.max_workload(t) for tb in hp_mem) + sum(
+                    tb.max_workload(t) for tb in hp_cpu
+                )
+
+            r3 = fixed_point(base3, interf_joint, limit)
+            r2 = min(r2, r3)
+
+        return TaskAnalysis(
+            name=task.name or f"task{k}",
+            n_vsm=n_vsm,
+            gpu_resp_lo=gpu_lo,
+            gpu_resp_hi=gpu_hi,
+            mem_resp_hi=tuple(mem_resp),
+            cpu_resp_hi=tuple(cpu_resp),
+            r1=r1,
+            r2=r2,
+            deadline=task.deadline,
+        )
+
+
+def analyze_rtgpu(taskset: TaskSet, alloc: Sequence[int]) -> SetAnalysis:
+    """Full RTGPU schedulability analysis for a given virtual-SM allocation.
+
+    ``alloc[i]`` is GN_i (physical SMs / chip-slices); each task gets
+    ``2*GN_i`` virtual SMs (interleave lanes).  Priority order = index order
+    of ``taskset`` (0 highest).
+    """
+    if len(alloc) != len(taskset):
+        raise ValueError("allocation length must match task count")
+    inc = RtgpuIncremental(taskset)
+    return SetAnalysis(
+        tuple(inc.analyze_task(k, alloc) for k in range(len(taskset)))
+    )
+
+
+def analyze_rtgpu_plus(taskset: TaskSet, alloc: Sequence[int]) -> SetAnalysis:
+    """Beyond-paper variant: Theorem 5.6 plus the tightened joint bound R̂3."""
+    if len(alloc) != len(taskset):
+        raise ValueError("allocation length must match task count")
+    inc = RtgpuIncremental(taskset, tightened=True)
+    return SetAnalysis(
+        tuple(inc.analyze_task(k, alloc) for k in range(len(taskset)))
+    )

@@ -1,0 +1,122 @@
+"""Flash attention Pallas TPU kernel (causal, optional sliding window).
+
+Grid (batch*heads, q_blocks, kv_blocks); online-softmax state (m, l, acc)
+lives in VMEM scratch and persists across the innermost (kv) grid axis —
+logits tiles never touch HBM, which is precisely the memory-roofline fix
+for the jnp flash path (EXPERIMENTS.md §Perf: the q_block×kv_block tile
+traffic dominates the HLO memory term of the reference).
+
+GQA is handled upstream (ops.py expands K/V to the query head count, the
+sharding-preserving layout from models/attention.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention"]
+
+_NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, q_block: int, kv_block: int, n_kv: int,
+            window):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * q_block
+    k_start = ki * kv_block
+    # whole-tile skip for fully-masked (future) tiles
+    needed = k_start <= q_start + q_block - 1
+    if window is not None:
+        needed &= k_start + kv_block - 1 > q_start - window
+
+    @pl.when(needed)
+    def _tile():
+        q = q_ref[0]  # [q_block, hd]
+        k = k_ref[0]  # [kv_block, hd]
+        v = v_ref[0]
+        logits = (
+            jax.lax.dot_general(
+                q, k, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+            * scale
+        )  # [q_block, kv_block]
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+        mask = kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        logits = jnp.where(mask, logits, _NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, logits.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(logits - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _flush():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "window", "q_block", "kv_block", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,  # [BH, S, hd]  (batch*heads flattened, K/V pre-expanded)
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    scale: float,
+    window=None,
+    q_block: int = 256,
+    kv_block: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    bh, s, hd = q.shape
+    assert k.shape == (bh, s, hd) and v.shape == (bh, s, hd)
+    assert s % q_block == 0 and s % kv_block == 0
+    nq = s // q_block
+    nk = s // kv_block
+    grid = (bh, nq, nk)
+
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, scale=scale, q_block=q_block, kv_block=kv_block,
+            n_kv=nk, window=window,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q_block, hd), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, kv_block, hd), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, kv_block, hd), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_block, hd), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block, 1), jnp.float32),   # running max
+            pltpu.VMEM((q_block, 1), jnp.float32),   # running denom
+            pltpu.VMEM((q_block, hd), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,81 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+These adapt model-layer shapes to kernel layouts (GQA expansion, head
+flattening, block-size selection, padding) and fall through to interpret
+mode on CPU so the same call sites work on the dry-run host.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention
+from .persistent_matmul import persistent_matmul
+from .selective_scan import selective_scan
+
+__all__ = ["pinned_matmul", "mha_flash", "mamba_scan", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pick_block(n: int, target: int) -> int:
+    b = min(target, n)
+    while n % b:
+        b -= 1
+    return max(b, 1)
+
+
+def pinned_matmul(x, w, *, n_bands: int = 8, interpret=None):
+    """Persistent/pinned matmul with automatic block-size selection.
+
+    ``n_bands`` is the task's virtual-SM band allocation (2·GN lanes run
+    per band — Lemma 5.1's 2GN units)."""
+    interpret = (not on_tpu()) if interpret is None else interpret
+    m, k = x.shape
+    _, n = w.shape
+    bm = _pick_block(m, 128)
+    bn = _pick_block(n, 128)
+    bk = _pick_block(k, 128)
+    # the tile space must split evenly over bands x 2 lanes
+    while (m // bm) * (n // bn) % (n_bands * 2) and n_bands > 1:
+        n_bands //= 2
+    if (m // bm) * (n // bn) % (n_bands * 2):
+        return x @ w  # degenerate tiling: fall back
+    return persistent_matmul(
+        x, w, n_bands=n_bands, block_m=bm, block_n=bn, block_k=bk,
+        interpret=interpret,
+    )
+
+
+def mha_flash(q, k, v, *, scale: float, window=None, interpret=None):
+    """q: [B, S, H, hd]; k/v: [B, S, Hkv, hd] -> [B, S, H*hd]."""
+    interpret = (not on_tpu()) if interpret is None else interpret
+    b, s, h, hd = q.shape
+    hkv = k.shape[2]
+    if hkv != h:
+        k = jnp.repeat(k, h // hkv, axis=2)
+        v = jnp.repeat(v, h // hkv, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    qb = _pick_block(s, 256)
+    out = flash_attention(
+        qf, kf, vf, scale=scale, window=window, q_block=qb, kv_block=qb,
+        interpret=interpret,
+    )
+    return out.reshape(b, h, s, hd).transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+
+
+def mamba_scan(abar, bx, c, *, interpret=None):
+    interpret = (not on_tpu()) if interpret is None else interpret
+    b, s, d, n = abar.shape
+    return selective_scan(
+        abar, bx, c,
+        chunk=_pick_block(s, 128),
+        d_block=_pick_block(d, 256),
+        interpret=interpret,
+    )

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["matmul_ref", "flash_attention_ref", "selective_scan_ref"]
+
+
+def matmul_ref(x, w):
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def flash_attention_ref(q, k, v, *, scale: float, window=None):
+    """q/k/v: [BH, S, hd]; causal (+ optional sliding window)."""
+    bh, s, hd = q.shape
+    logits = jnp.einsum(
+        "bqd,bkd->bqk", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    qi = jnp.arange(s)[:, None]
+    kj = jnp.arange(s)[None, :]
+    mask = kj <= qi
+    if window is not None:
+        mask &= kj > qi - window
+    logits = jnp.where(mask[None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum(
+        "bqk,bkd->bqd", probs.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    ).astype(q.dtype)
+
+
+def selective_scan_ref(abar, bx, c):
+    """abar/bx: [B, S, D, N]; c: [B, S, N] -> y [B, S, D] (float32)."""
+
+    def combine(left, right):
+        a1, h1 = left
+        a2, h2 = right
+        return a1 * a2, h1 * a2 + h2
+
+    a_cum, h = jax.lax.associative_scan(
+        combine, (abar.astype(jnp.float32), bx.astype(jnp.float32)), axis=1
+    )
+    del a_cum
+    return jnp.einsum("bsdn,bsn->bsd", h, c.astype(jnp.float32))

@@ -1,0 +1,89 @@
+"""Selective-scan (Mamba SSM) Pallas TPU kernel.
+
+Computes  h_t = abar_t ⊙ h_{t-1} + bx_t ;  y_t = Σ_s h_t[d, s] · c_t[s]
+over a sequence chunk, with the recurrent state h [d_block, d_state] held
+in VMEM scratch that persists across the sequential time-chunk grid axis —
+the [S, d, d_state] hidden is never materialized in HBM (the HBM-residency
+of that tensor is what sinks a naive XLA lowering; see models/mamba.py).
+
+Grid: (batch, d_blocks, time_chunks); time is innermost (sequential).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["selective_scan"]
+
+
+def _kernel(abar_ref, bx_ref, c_ref, y_ref, h_ref, *, chunk: int):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    def step(t, h):
+        # h: [d_block, d_state]
+        a_t = abar_ref[0, 0, t]   # [d_block, d_state]
+        b_t = bx_ref[0, 0, t]     # [d_block, d_state]
+        c_t = c_ref[0, 0, t]      # [d_state]
+        h = a_t * h + b_t
+        y_ref[0, 0, t] = (h * c_t[None, :]).sum(axis=-1).astype(y_ref.dtype)
+        return h
+
+    h_ref[...] = jax.lax.fori_loop(0, chunk, step, h_ref[...])
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "d_block", "interpret")
+)
+def selective_scan(
+    abar: jax.Array,  # [B, S, D, N] discretized A
+    bx: jax.Array,    # [B, S, D, N] discretized B·x
+    c: jax.Array,     # [B, S, N]    output projection per step
+    *,
+    chunk: int = 128,
+    d_block: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns y: [B, S, D] (the h-state contraction with c per step)."""
+    b, s, d, n = abar.shape
+    assert bx.shape == (b, s, d, n) and c.shape == (b, s, n)
+    if s % chunk != 0:
+        chunk = s
+    if d % d_block != 0:
+        d_block = d
+    n_chunks = s // chunk
+    n_dblocks = d // d_block
+    grid = (b, n_dblocks, n_chunks)
+
+    # layout: time-chunked [B, n_chunks, chunk, D, N]
+    abar_r = abar.reshape(b, n_chunks, chunk, d, n)
+    bx_r = bx.reshape(b, n_chunks, chunk, d, n)
+    c_r = c.reshape(b, n_chunks, chunk, n)
+
+    y = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(
+                (1, 1, chunk, d_block, n), lambda bi, di, ti: (bi, ti, 0, di, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, chunk, d_block, n), lambda bi, di, ti: (bi, ti, 0, di, 0)
+            ),
+            pl.BlockSpec((1, 1, chunk, n), lambda bi, di, ti: (bi, ti, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, chunk, d_block), lambda bi, di, ti: (bi, ti, 0, di)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, n_chunks, chunk, d), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((d_block, n), jnp.float32)],
+        interpret=interpret,
+    )(abar_r, bx_r, c_r)
+    return y.reshape(b, s, d)

@@ -1,0 +1,150 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+on the production meshes, and extract the roofline terms.
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and the dry-run needs 512 placeholder host devices for the
+2×16×16 multi-pod mesh.  Do not set this anywhere global — smoke tests and
+benchmarks see 1 device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --arch dbrx-132b --shape decode_32k --multi-pod
+"""
+import argparse
+import json
+import pathlib
+import re
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, shape_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_bundle
+from repro.roofline import analyze_hlo, roofline_report
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool = False,
+            verbose: bool = True) -> dict:
+    """Lower + compile one (arch, shape, mesh); return the dry-run record."""
+    cfg = shape_config(arch, shape_name)
+    if cfg is None:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": "see DESIGN.md §4 skip table"}
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    bundle = build_bundle(cfg, shape, mesh)
+    with mesh:
+        jitted = jax.jit(
+            bundle.step_fn,
+            in_shardings=bundle.in_shardings,
+            donate_argnums=bundle.donate_argnums,
+        )
+        lowered = jitted.lower(*bundle.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    stats = analyze_hlo(compiled.as_text())
+    n_chips = mesh.size
+
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": n_chips,
+        "kind": shape.kind,
+        "status": "ok",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "flops_total": stats.flops,                 # per-device, loop-weighted
+        "bytes_accessed": stats.bytes_accessed,     # per-device, loop-weighted
+        "collective_bytes": stats.collective_bytes, # per-device, loop-weighted
+        "collective_breakdown": stats.collective_counts,
+        "xla_cost_analysis": {
+            "flops": cost.get("flops", 0.0),
+            "bytes_accessed": cost.get("bytes accessed", 0.0),
+        },
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", 0),
+            # peak live bytes: args + outputs + temps, minus donated aliases
+            # (an aliased output shares its input buffer)
+            "peak_bytes": (
+                getattr(mem, "argument_size_in_bytes", 0)
+                + getattr(mem, "output_size_in_bytes", 0)
+                + getattr(mem, "temp_size_in_bytes", 0)
+                - getattr(mem, "alias_size_in_bytes", 0)
+            ),
+        },
+        "param_count": cfg.param_count(),
+        "active_param_count": cfg.active_param_count(),
+    }
+    record["roofline"] = roofline_report(record, cfg, shape)
+    if verbose:
+        print(f"== {arch} × {shape_name} × {record['mesh']} ==")
+        print(compiled.memory_analysis())
+        print({k: v for k, v in (cost or {}).items()
+               if k in ("flops", "bytes accessed")})
+        print(json.dumps(record["roofline"], indent=2))
+    return record
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=str(RESULTS_DIR))
+    args = ap.parse_args(argv)
+
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    combos = []
+    archs = ARCH_IDS if (args.all or not args.arch) else (args.arch,)
+    shapes = tuple(INPUT_SHAPES) if (args.all or not args.shape) else (args.shape,)
+    meshes = (False, True) if args.both_meshes else (args.multi_pod,)
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                combos.append((a, s, mp))
+
+    failures = 0
+    for a, s, mp in combos:
+        tag = f"{a}__{s}__{'2x16x16' if mp else '16x16'}"
+        out_file = outdir / f"{tag}.json"
+        if out_file.exists():
+            print(f"skip (cached): {tag}")
+            continue
+        try:
+            rec = run_one(a, s, multi_pod=mp)
+        except Exception as e:  # a failure here is a bug in the system
+            failures += 1
+            rec = {"arch": a, "shape": s,
+                   "mesh": "2x16x16" if mp else "16x16",
+                   "status": "FAILED", "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-4000:]}
+            print(f"FAILED: {tag}: {e}", file=sys.stderr)
+        out_file.write_text(json.dumps(rec, indent=2, default=float))
+    print(f"done: {len(combos)} combos, {failures} failures -> {outdir}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,25 @@
+"""Production mesh construction (functions only — importing this module
+never touches jax device state).
+
+Single pod: 16x16 = 256 chips, axes ("data", "model").
+Multi-pod:  2x16x16 = 512 chips, axes ("pod", "data", "model") — the "pod"
+axis is pure data parallelism across ICI-disconnected pods (DCN); params
+are replicated across pods and gradient all-reduce crosses the pod axis.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """1-device mesh with the production axis names (tests / examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))

@@ -1,0 +1,204 @@
+"""Step builders: jit-able train_step / prefill_step / decode_step per
+(architecture config × input shape), plus ShapeDtypeStruct input specs for
+the dry-run (no device allocation anywhere).
+
+Activation sharding: the residual stream is batch-over-data +
+d_model-over-model (tensor-parallel activations) between layers; sequence
+stays local — see _act_shard_fn for why.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import INPUT_SHAPES, InputShape, Model, ModelConfig
+from repro.models.sharding import batch_spec, cache_specs, param_specs
+from repro.train.optimizer import AdamWConfig, OptState, adamw_update, init_opt_state
+
+__all__ = ["StepBundle", "build_bundle", "input_specs"]
+
+
+def _act_shard_fn(mesh: Mesh):
+    """Residual-stream constraint: batch over data axes, d_model over the
+    model axis (tensor-parallel activations).
+
+    We deliberately do NOT sequence-shard the residual: recurrent mixers
+    (mamba/xLSTM time scans), MoE routing cumsums and flash block reshapes
+    all need the sequence locally, and a seq-sharded residual drives XLA
+    SPMD into "involuntary full rematerialization" (replicating whole
+    activations) — §Perf iteration 2 measured >10× peak-memory inflation
+    from exactly this."""
+    model_ax = "model"
+    b_axes = batch_spec(mesh)
+
+    def act_shard(x, kind):
+        if mesh is None or x.ndim != 3:
+            return x
+        import numpy as np
+
+        b = x.shape[0]
+        d = x.shape[-1]
+        dp = int(np.prod([mesh.shape[a] for a in b_axes]))
+        row = b_axes if b % dp == 0 else (
+            "data" if b % mesh.shape["data"] == 0 else None
+        )
+        dcol = model_ax if d % mesh.shape[model_ax] == 0 else None
+        if kind in ("residual", "decode"):
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(row, None, dcol))
+            )
+        return x
+
+    return act_shard
+
+
+@dataclasses.dataclass
+class StepBundle:
+    """Everything the dry-run / trainer / server needs for one (cfg, shape)."""
+
+    cfg: ModelConfig
+    shape: InputShape
+    mesh: Mesh
+    model: Model
+    step_fn: Any           # jit-able callable
+    args: tuple            # ShapeDtypeStructs (or arrays) for step_fn
+    in_shardings: tuple
+    kind: str              # train | prefill | decode
+    donate_argnums: tuple = ()  # params/opt-state (train), caches (serve)
+
+
+def _batch_sharding(mesh: Mesh, batch: int):
+    b_axes = batch_spec(mesh)
+    import numpy as np
+
+    dp = int(np.prod([mesh.shape[a] for a in b_axes]))
+    if batch % dp == 0:
+        return NamedSharding(mesh, P(b_axes, None))
+    if batch % mesh.shape["data"] == 0:
+        return NamedSharding(mesh, P("data", None))
+    return NamedSharding(mesh, P(None, None))
+
+
+def _embeds_sharding(mesh: Mesh, batch: int):
+    b = _batch_sharding(mesh, batch)
+    return NamedSharding(mesh, P(*b.spec, None))
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, model: Model):
+    """ShapeDtypeStruct stand-ins for every model input of this shape."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f32 = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    specs: dict[str, Any] = {}
+    if shape.kind == "train":
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        specs["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+    elif shape.kind == "prefill":
+        cache_len = s + cfg.n_patches  # VLM prompts prepend patch embeddings
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        specs["caches"] = jax.eval_shape(lambda: model.init_caches(b, cache_len))
+    else:  # decode: one token against a cache of seq_len
+        cache_len = s + cfg.n_patches
+        specs["token"] = jax.ShapeDtypeStruct((b, 1), i32)
+        specs["caches"] = jax.eval_shape(lambda: model.init_caches(b, cache_len))
+        specs["cache_len"] = jax.ShapeDtypeStruct((b,), i32)
+    if cfg.n_patches:
+        specs["extra_embeds"] = jax.ShapeDtypeStruct((b, cfg.n_patches, cfg.d_model), f32)
+    if cfg.is_encoder_decoder and shape.kind in ("train", "prefill"):
+        specs["enc_embeds"] = jax.ShapeDtypeStruct((b, cfg.enc_ctx, cfg.d_model), f32)
+    return specs
+
+
+def build_bundle(
+    cfg: ModelConfig,
+    shape: InputShape,
+    mesh: Mesh,
+    opt: Optional[AdamWConfig] = None,
+) -> StepBundle:
+    model = Model(cfg, act_shard=_act_shard_fn(mesh))
+    pshapes = jax.eval_shape(lambda: model.init_params(jax.random.PRNGKey(0)))
+    pspecs = param_specs(pshapes, mesh)
+    pshard = jax.tree_util.tree_map(
+        lambda sp: NamedSharding(mesh, sp), pspecs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    specs = input_specs(cfg, shape, model)
+    bsh = _batch_sharding(mesh, shape.global_batch)
+    opt = opt or AdamWConfig()
+
+    if shape.kind == "train":
+        ostate_shapes = jax.eval_shape(lambda: init_opt_state(pshapes))
+        oshard = OptState(
+            m=pshard, v=pshard,
+            step=NamedSharding(mesh, P()),
+        )
+
+        def train_step(params, opt_state, tokens, labels, *extra):
+            kw = {}
+            i = 0
+            if cfg.n_patches:
+                kw["extra_embeds"] = extra[i]; i += 1
+            if cfg.is_encoder_decoder:
+                kw["enc_embeds"] = extra[i]; i += 1
+            loss, grads = jax.value_and_grad(
+                lambda p: model.loss(p, tokens, labels, **kw)
+            )(params)
+            new_params, new_state, metrics = adamw_update(opt, params, grads, opt_state)
+            return new_params, new_state, loss, metrics
+
+        args = [pshapes, ostate_shapes, specs["tokens"], specs["labels"]]
+        inshard = [pshard, oshard, bsh, bsh]
+        if cfg.n_patches:
+            args.append(specs["extra_embeds"])
+            inshard.append(_embeds_sharding(mesh, shape.global_batch))
+        if cfg.is_encoder_decoder:
+            args.append(specs["enc_embeds"])
+            inshard.append(_embeds_sharding(mesh, shape.global_batch))
+        # donate params + optimizer state: outputs alias the inputs in HBM
+        return StepBundle(cfg, shape, mesh, model, train_step, tuple(args),
+                          tuple(inshard), "train", donate_argnums=(0, 1))
+
+    cshard = jax.tree_util.tree_map(
+        lambda sp: NamedSharding(mesh, sp),
+        cache_specs(specs["caches"], mesh, shape.global_batch),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+    if shape.kind == "prefill":
+
+        def prefill_step(params, tokens, caches, *extra):
+            kw = {}
+            i = 0
+            if cfg.n_patches:
+                kw["extra_embeds"] = extra[i]; i += 1
+            if cfg.is_encoder_decoder:
+                kw["enc_embeds"] = extra[i]; i += 1
+            logits, new_caches, _ = model.prefill(params, tokens, caches, **kw)
+            return logits, new_caches
+
+        args = [pshapes, specs["tokens"], specs["caches"]]
+        inshard = [pshard, bsh, cshard]
+        if cfg.n_patches:
+            args.append(specs["extra_embeds"])
+            inshard.append(_embeds_sharding(mesh, shape.global_batch))
+        if cfg.is_encoder_decoder:
+            args.append(specs["enc_embeds"])
+            inshard.append(_embeds_sharding(mesh, shape.global_batch))
+        # donate the cache buffers: the filled cache aliases the empty one
+        return StepBundle(cfg, shape, mesh, model, prefill_step, tuple(args),
+                          tuple(inshard), "prefill", donate_argnums=(2,))
+
+    # decode: serve_step — ONE new token against a seq_len cache
+    def decode_step(params, token, caches, cache_len):
+        return model.decode_step(params, token, caches, cache_len)
+
+    args = (pshapes, specs["token"], specs["caches"], specs["cache_len"])
+    lenshard = NamedSharding(mesh, P(bsh.spec[0]))
+    inshard = (pshard, bsh, cshard, lenshard)
+    return StepBundle(cfg, shape, mesh, model, decode_step, tuple(args),
+                      tuple(inshard), "decode", donate_argnums=(2,))

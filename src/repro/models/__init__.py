@@ -1,0 +1,24 @@
+"""Model zoo: 10 assigned architectures over one pattern-scanned substrate.
+
+config.py     ModelConfig / LayerSpec / input shapes
+layers.py     norms, rotary, SwiGLU, embeddings
+attention.py  GQA + qk-norm + sliding-window; flash (chunked) jnp path
+moe.py        capacity-based top-k MoE (expert-parallel friendly)
+mamba.py      selective SSM (chunked scan; O(1)-state decode)
+xlstm.py      mLSTM / sLSTM blocks
+blocks.py     block assembly per (mixer, ffn) spec
+model.py      Model: train / prefill / decode over scanned repeats
+sharding.py   PartitionSpec rules for params / inputs / caches
+"""
+from .config import INPUT_SHAPES, InputShape, LayerSpec, ModelConfig
+from .model import Model
+from . import sharding
+
+__all__ = [
+    "INPUT_SHAPES",
+    "InputShape",
+    "LayerSpec",
+    "ModelConfig",
+    "Model",
+    "sharding",
+]

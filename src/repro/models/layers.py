@@ -1,0 +1,117 @@
+"""Shared neural layers: norms, rotary embeddings, SwiGLU MLP, embeddings.
+
+Pure-JAX, pytree-parameterized (no flax).  Every init function returns a
+nested dict of arrays; the matching apply function takes (params, x).
+Parameter leading dims may carry a stacked "repeats" axis for scan-over-
+layers — apply functions never look at it; scanning slices it away.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "rms_norm",
+    "layer_norm",
+    "init_norm",
+    "apply_norm",
+    "rotary_cos_sin",
+    "apply_rotary",
+    "init_dense",
+    "dense",
+    "init_mlp",
+    "mlp",
+    "init_embedding",
+]
+
+
+def init_dense(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return {"w": (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)}
+
+
+def dense(params, x):
+    return x @ params["w"]
+
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    if weight is not None:
+        x = x * weight
+    return x.astype(dt)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    if weight is not None:
+        x = x * weight
+    if bias is not None:
+        x = x + bias
+    return x.astype(dt)
+
+
+def init_norm(kind: str, d: int, dtype):
+    """kind: rms | ln | nonparam_ln (OLMo's non-parametric LayerNorm).
+
+    The kind is *static* (from ModelConfig) — params hold arrays only so the
+    tree is scannable/stackable."""
+    if kind == "rms":
+        return {"w": jnp.ones((d,), dtype)}
+    if kind == "ln":
+        return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+    if kind == "nonparam_ln":
+        return {"np": jnp.zeros((), dtype)}  # placeholder leaf (keeps trees uniform)
+    raise ValueError(f"unknown norm kind {kind}")
+
+
+def apply_norm(params, x, kind: str):
+    if kind == "rms":
+        return rms_norm(x, params["w"])
+    if kind == "ln":
+        return layer_norm(x, params["w"], params["b"])
+    return layer_norm(x, None, None)  # non-parametric (arXiv:2402.00838)
+
+
+def rotary_cos_sin(positions, head_dim: int, theta: float, dtype=jnp.float32):
+    """positions: int array [...]; returns cos/sin of shape [..., head_dim/2]."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(angles).astype(dtype), jnp.sin(angles).astype(dtype)
+
+
+def apply_rotary(x, cos, sin):
+    """x: [..., n_heads, head_dim]; cos/sin broadcast over the head axis."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": init_dense(k1, d_model, d_ff, dtype)["w"],
+        "w_up": init_dense(k2, d_model, d_ff, dtype)["w"],
+        "w_down": init_dense(k3, d_ff, d_model, dtype)["w"],
+    }
+
+
+def mlp(params, x):
+    """SwiGLU feed-forward."""
+    gate = jax.nn.silu(x @ params["w_gate"])
+    up = x @ params["w_up"]
+    return (gate * up) @ params["w_down"]
+
+
+def init_embedding(key, vocab: int, d_model: int, dtype):
+    return {"w": (jax.random.normal(key, (vocab, d_model)) * 0.02).astype(dtype)}

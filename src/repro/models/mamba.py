@@ -1,0 +1,150 @@
+"""Mamba (selective SSM) mixer — training scan + O(1)-state decode.
+
+Training uses a chunked time scan (lax.scan over chunks, associative scan
+inside a chunk) so the [*, d_state] hidden is never materialized for the
+whole sequence — this is what makes jamba's long_500k/train_4k shapes fit
+HBM.  Decode updates a [B, d_inner, d_state] SSM state and a rolling
+[B, d_conv, d_inner] conv buffer per layer.
+
+kernels/selective_scan provides the Pallas TPU kernel for the inner chunk
+scan; this module is its oracle.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import init_dense
+
+__all__ = ["MambaState", "init_mamba", "mamba_train", "mamba_decode",
+           "init_mamba_state", "ssm_scan_chunked"]
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array  # [B, d_conv-1, d_inner] trailing inputs
+    ssm: jax.Array   # [B, d_inner, d_state]
+
+
+def init_mamba(key, cfg, dtype):
+    d, di, ds, dc = cfg.d_model, cfg.d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A (negative reals)
+    a_log = jnp.log(jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds)))
+    return {
+        "in_proj": init_dense(ks[0], d, 2 * di, dtype)["w"],      # x and gate z
+        "conv_w": (jax.random.normal(ks[1], (dc, di)) * dc ** -0.5).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": init_dense(ks[2], di, 2 * ds + 1, dtype)["w"],  # B, C, dt
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "dt_proj": init_dense(ks[3], 1, di, jnp.float32)["w"],    # dt scalar -> di
+        "a_log": a_log,                                            # [di, ds]
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": init_dense(ks[4], di, d, dtype)["w"],
+    }
+
+
+def _ssm_params(params, xc):
+    """Per-timestep SSM parameters from the post-conv activation xc [..., di]."""
+    ds = params["a_log"].shape[1]
+    proj = xc @ params["x_proj"]  # [..., 2*ds+1]
+    b_t = proj[..., :ds]
+    c_t = proj[..., ds : 2 * ds]
+    dt_raw = proj[..., 2 * ds :]  # [..., 1]
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) @ params["dt_proj"] + params["dt_bias"]
+    )  # [..., di]
+    a = -jnp.exp(params["a_log"])  # [di, ds]
+    # discretize: abar = exp(dt*A), bbar x = dt * B * x
+    abar = jnp.exp(dt[..., None] * a)  # [..., di, ds]
+    bx = (dt * xc.astype(jnp.float32))[..., None] * b_t[..., None, :].astype(
+        jnp.float32
+    )  # [..., di, ds]
+    return abar, bx, c_t
+
+
+def ssm_scan_chunked(params, xc, chunk: int = 128):
+    """xc: [B, S, di] post-conv activations -> (y [B, S, di], h_final).
+
+    Outer lax.scan over S/chunk chunks carrying h [B, di, ds]; inner
+    associative scan over the chunk.  Peak extra memory is one chunk's
+    [B, chunk, di, ds] — chunk trades HBM for scan latency.
+    """
+    b, s, di = xc.shape
+    if s % chunk != 0:
+        chunk = s  # small sequences: single chunk
+    n = s // chunk
+    xcs = xc.reshape(b, n, chunk, di)
+
+    @jax.checkpoint
+    def chunk_step(h, xchunk):
+        # xchunk: [B, chunk, di]; checkpointed: backward recomputes the
+        # in-chunk scan instead of saving [B, chunk, di, ds] per chunk
+        abar, bx, c_t = _ssm_params(params, xchunk)  # [B,chunk,di,ds] x2
+
+        def combine(left, right):
+            a1, b1 = left
+            a2, b2 = right
+            return a1 * a2, b1 * a2 + b2
+
+        a_cum, h_inner = jax.lax.associative_scan(combine, (abar, bx), axis=1)
+        h_all = h_inner + a_cum * h[:, None]  # [B, chunk, di, ds]
+        y = jnp.einsum("bcds,bcs->bcd", h_all, c_t.astype(jnp.float32))
+        return h_all[:, -1], y
+
+    h0 = jnp.zeros((b, di, params["a_log"].shape[1]), jnp.float32)
+    h_final, ys = jax.lax.scan(chunk_step, h0, jnp.moveaxis(xcs, 1, 0))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, di)
+    y = y + xc.astype(jnp.float32) * params["d_skip"]
+    return y, h_final
+
+
+def _causal_conv(params, x):
+    """Depthwise causal conv over time. x: [B, S, di]."""
+    dc = params["conv_w"].shape[0]
+    pad = jnp.pad(x, ((0, 0), (dc - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + x.shape[1], :] * params["conv_w"][i] for i in range(dc)
+    )
+    return jax.nn.silu(out + params["conv_b"])
+
+
+def mamba_train(params, cfg, x):
+    """x: [B, S, D] -> [B, S, D]."""
+    xi = x @ params["in_proj"]
+    xz, z = jnp.split(xi, 2, axis=-1)
+    xc = _causal_conv(params, xz)
+    y, _ = ssm_scan_chunked(params, xc)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ params["out_proj"]
+
+
+def init_mamba_state(cfg, batch: int, dtype=jnp.float32) -> MambaState:
+    return MambaState(
+        conv=jnp.zeros((batch, cfg.mamba_d_conv - 1, cfg.d_inner), dtype),
+        ssm=jnp.zeros((batch, cfg.d_inner, cfg.mamba_d_state), jnp.float32),
+    )
+
+
+def mamba_decode(params, cfg, x, state: MambaState):
+    """One-token step. x: [B, 1, D] -> ([B, 1, D], new state)."""
+    b = x.shape[0]
+    xi = x[:, 0] @ params["in_proj"]
+    xz, z = jnp.split(xi, 2, axis=-1)  # [B, di]
+
+    # rolling conv buffer
+    window = jnp.concatenate([state.conv, xz[:, None].astype(state.conv.dtype)], axis=1)
+    dc = params["conv_w"].shape[0]
+    xc = jax.nn.silu(
+        jnp.einsum("bcd,cd->bd", window, params["conv_w"]) + params["conv_b"]
+    )
+    new_conv = window[:, 1:]
+
+    abar, bx, c_t = _ssm_params(params, xc)  # [B, di, ds]
+    h = state.ssm * abar + bx
+    y = jnp.einsum("bds,bs->bd", h, c_t.astype(jnp.float32))
+    y = y + xc.astype(jnp.float32) * params["d_skip"]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = (y @ params["out_proj"])[:, None]
+    return out, MambaState(conv=new_conv, ssm=h)

@@ -1,0 +1,189 @@
+"""Sharding rules: params / activations / caches → PartitionSpec trees.
+
+Scheme (DESIGN.md §3, MaxText-style logical rules):
+  * tensor-parallel dims (heads, d_ff, vocab, experts, d_inner) → "model"
+  * the other matmul dim → "data" (FSDP / weight-gathered serving), so
+    132B-class params fit 16 GB HBM per chip
+  * batch → ("pod", "data") multi-pod, ("data",) single-pod
+  * decode KV-cache sequence dim → "model" (context parallelism)
+  * any dim not divisible by its mesh axis size falls back to replication
+
+The rules are *name-based* over the parameter tree paths produced by
+models/model.py, so new layers inherit sensible defaults.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["param_specs", "input_specs_train", "cache_specs", "batch_spec",
+           "to_shardings"]
+
+
+# leaf-name -> (logical axes per dim), applied to the trailing dims
+# (a leading stacked "repeats"/"layers" dim is auto-detected and unsharded).
+_RULES: dict[str, tuple[Optional[str], ...]] = {
+    # embeddings / head: [vocab, d_model]
+    "embed/w": ("model", "data"),
+    "lm_head/w": ("model", "data"),
+    # attention
+    "wq": ("data", "model"),
+    "wk": ("data", "model"),
+    "wv": ("data", "model"),
+    "wo": ("model", "data"),
+    "q_norm": (None,),
+    "k_norm": (None,),
+    # mlp
+    "w_gate": ("data", "model"),
+    "w_up": ("data", "model"),
+    "w_down": ("model", "data"),
+    # moe (leading expert dim)
+    "ffn/w_gate": ("expert", "data", "model"),
+    "ffn/w_up": ("expert", "data", "model"),
+    "ffn/w_down": ("expert", "model", "data"),
+    "router": ("data", None),
+    # mamba
+    "in_proj": ("data", "model"),
+    "out_proj": ("model", "data"),
+    "conv_w": (None, "model"),
+    "conv_b": ("model",),
+    "x_proj": ("model", None),
+    "dt_proj": (None, "model"),
+    "dt_bias": ("model",),
+    "a_log": ("model", None),
+    "d_skip": ("model",),
+    # xlstm
+    "up_proj": ("data", "model"),
+    "down_proj": ("model", "data"),
+    "w_gates": (None, "model"),
+    "r_gates": (None, "model"),
+    "b_gates": ("model",),
+    "w_if": (None, None),
+    "b_if": (None,),
+    "out_norm": (None,),
+}
+
+_LOGICAL_TO_MESH = {"model": "model", "expert": "model", "data": "data"}
+
+
+def _mesh_axis_size(mesh: Mesh, axis: Optional[str]) -> int:
+    if axis is None:
+        return 1
+    return mesh.shape[axis]
+
+
+def _spec_for(path: str, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Pick the most specific rule whose arity matches the leaf.
+
+    Params under a stacked "layers/" tree carry exactly one leading repeats
+    dim; the rule must cover the remaining dims exactly — this is what keeps
+    the expert rules (3 trailing dims) from grabbing non-MoE stacked
+    [repeats, d, f] weights."""
+    ndim = len(shape)
+    lead = 1 if ("layers/" in path) else 0
+    candidates = [
+        _RULES[name]
+        for name in sorted(_RULES, key=len, reverse=True)
+        if path.endswith(name)
+    ]
+    tail = path.split("/")[-1]
+    if tail in _RULES and _RULES[tail] not in candidates:
+        candidates.append(_RULES[tail])
+    rule = next((r for r in candidates if len(r) == ndim - lead), None)
+    if rule is None:
+        # fall back to any rule that fits with non-negative lead
+        rule = next((r for r in candidates if len(r) <= ndim), None)
+        if rule is None:
+            return P()  # replicate (norms, scalars)
+        lead = ndim - len(rule)
+    axes: list[Optional[str]] = [None] * lead
+    used: set[str] = set()
+    for dim_size, logical in zip(shape[lead:], rule):
+        mesh_axis = _LOGICAL_TO_MESH.get(logical) if logical else None
+        if (
+            mesh_axis is not None
+            and mesh_axis in mesh.shape
+            and mesh_axis not in used
+            and dim_size % _mesh_axis_size(mesh, mesh_axis) == 0
+        ):
+            axes.append(mesh_axis)
+            used.add(mesh_axis)
+        else:
+            axes.append(None)
+    return P(*axes)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_specs(params_shape: Any, mesh: Mesh):
+    """PartitionSpec tree matching a params (shape-)pytree."""
+
+    def leaf_spec(path, leaf):
+        shape = leaf.shape if hasattr(leaf, "shape") else ()
+        if not shape:
+            return P()
+        return _spec_for(_path_str(path), tuple(shape), mesh)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params_shape)
+
+
+def batch_spec(mesh: Mesh) -> tuple:
+    """Mesh axes used for the batch dim."""
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def input_specs_train(mesh: Mesh):
+    """tokens/labels [B, S]."""
+    return P(batch_spec(mesh), None)
+
+
+def cache_specs(caches_shape: Any, mesh: Mesh, batch: int):
+    """Decode caches: batch → data axes; KV sequence dim → model axis.
+
+    Leaf shapes: [repeats, B, S, kvH, hd] (kv), [repeats, B, ...] (states).
+    """
+    bs = batch_spec(mesh)
+    dp = int(np.prod([mesh.shape[a] for a in bs]))
+    b_ax = bs if batch % dp == 0 else (
+        ("data",) if batch % mesh.shape["data"] == 0 else None
+    )
+
+    def leaf_spec(path, leaf):
+        shape = tuple(leaf.shape)
+        p = _path_str(path)
+        axes: list[Any] = [None] * len(shape)
+        if len(shape) >= 2:
+            axes[1] = b_ax  # [repeats, B, ...]
+        if "kv/" in p or p.endswith("/k") or p.endswith("/v"):
+            # [repeats, B, S, kvH, hd]: context-parallel sequence dim
+            if len(shape) == 5 and shape[2] % mesh.shape["model"] == 0:
+                axes[2] = "model"
+        elif len(shape) >= 3:
+            # recurrent states: shard the widest trailing dim over model
+            widths = list(shape[2:])
+            j = 2 + int(np.argmax(widths))
+            if shape[j] % mesh.shape["model"] == 0 and shape[j] >= mesh.shape["model"]:
+                axes[j] = "model"
+        return P(*axes)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, caches_shape)
+
+
+def to_shardings(spec_tree: Any, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,251 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) and sLSTM.
+
+mLSTM: per-head matrix memory C [hd, hd] with exponential input/forget
+gates and max-state stabilization; queries read the memory.  Training runs
+a chunked lax.scan over time (state is O(hd²) per head, not O(S)), decode
+is a single state update — natively long-context, which is why xlstm-350m
+(and jamba's mamba layers) carry the long_500k shape without windowing.
+
+sLSTM: scalar-memory variant with exponential gating, per-head hidden h/c/n
+state and recurrent weights.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import init_dense, rms_norm
+
+__all__ = [
+    "MLstmState", "SLstmState",
+    "init_mlstm", "mlstm_train", "mlstm_decode", "init_mlstm_state",
+    "init_slstm", "slstm_train", "slstm_decode", "init_slstm_state",
+]
+
+
+class MLstmState(NamedTuple):
+    c: jax.Array  # [B, H, hd, hd] matrix memory
+    n: jax.Array  # [B, H, hd]    normalizer
+    m: jax.Array  # [B, H]        gate stabilizer (log space)
+
+
+class SLstmState(NamedTuple):
+    c: jax.Array  # [B, di] cell
+    n: jax.Array  # [B, di] normalizer
+    m: jax.Array  # [B, di] stabilizer
+    h: jax.Array  # [B, di] hidden (recurrent input)
+
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+
+def init_mlstm(key, cfg, dtype):
+    d = cfg.d_model
+    di = int(cfg.xlstm_proj_factor * d)
+    h = cfg.n_heads
+    hd = di // h
+    ks = jax.random.split(key, 8)
+    return {
+        "up_proj": init_dense(ks[0], d, 2 * di, dtype)["w"],  # x and gate z
+        "wq": init_dense(ks[1], di, di, dtype)["w"],
+        "wk": init_dense(ks[2], di, di, dtype)["w"],
+        "wv": init_dense(ks[3], di, di, dtype)["w"],
+        "w_if": init_dense(ks[4], di, 2 * h, jnp.float32)["w"],  # input/forget gates
+        "b_if": jnp.zeros((2 * h,), jnp.float32),
+        "out_norm": jnp.ones((di,), dtype),
+        "down_proj": init_dense(ks[5], di, d, dtype)["w"],
+    }
+
+
+def _mlstm_qkv(params, xz, h, hd):
+    b, s, di = xz.shape
+    q = (xz @ params["wq"]).reshape(b, s, h, hd) * hd ** -0.5
+    k = (xz @ params["wk"]).reshape(b, s, h, hd) * hd ** -0.5
+    v = (xz @ params["wv"]).reshape(b, s, h, hd)
+    gates = xz.astype(jnp.float32) @ params["w_if"] + params["b_if"]
+    i_gate, f_gate = jnp.split(gates, 2, axis=-1)  # [B, S, H] each (log space)
+    f_gate = jax.nn.log_sigmoid(f_gate)
+    return q, k, v, i_gate, f_gate
+
+
+def _mlstm_step(carry, inputs, hd):
+    c, n, m = carry
+    q_t, k_t, v_t, i_t, f_t = inputs  # [B,H,hd] x3, [B,H] x2
+    m_new = jnp.maximum(f_t + m, i_t)
+    i_eff = jnp.exp(i_t - m_new)
+    f_eff = jnp.exp(f_t + m - m_new)
+    c = f_eff[..., None, None] * c + i_eff[..., None, None] * (
+        k_t[..., :, None] * v_t[..., None, :]
+    ).astype(jnp.float32)
+    n = f_eff[..., None] * n + i_eff[..., None] * k_t.astype(jnp.float32)
+    num = jnp.einsum("bhd,bhde->bhe", q_t.astype(jnp.float32), c)
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", q_t.astype(jnp.float32), n))
+    y = num / jnp.maximum(den, jnp.exp(-m))[..., None]
+    return (c, n, m_new), y
+
+
+_CHUNK = 128  # recurrent-scan time chunk (backward recomputes in-chunk)
+
+
+def _mlstm_scan(params, cfg, x):
+    """Chunked mLSTM over the sequence -> (block output, final state).
+
+    The time scan runs over S/chunk chunks with the (c, n, m) state as
+    carry; the chunk body is jax.checkpoint'ed so backprop saves one state
+    per *chunk* instead of one per step (5.8 TB -> GBs on xlstm train_4k;
+    EXPERIMENTS.md §Perf)."""
+    b, s, _ = x.shape
+    di = int(cfg.xlstm_proj_factor * cfg.d_model)
+    h = cfg.n_heads
+    hd = di // h
+    up = x @ params["up_proj"]
+    xz, z = jnp.split(up, 2, axis=-1)
+    q, k, v, i_gate, f_gate = _mlstm_qkv(params, xz, h, hd)
+    chunk = _CHUNK if s % _CHUNK == 0 else s
+    n_chunks = s // chunk
+
+    def reshape_c(t):
+        return t.reshape((b, n_chunks, chunk) + t.shape[2:])
+
+    qc, kc, vc, ic, fc = map(reshape_c, (q, k, v, i_gate, f_gate))
+
+    @jax.checkpoint
+    def chunk_body(carry, inputs):
+        def step(c, t_in):
+            return _mlstm_step(c, t_in, hd)
+
+        seq = tuple(jnp.moveaxis(t, 1, 0) for t in inputs)
+        carry, ys = jax.lax.scan(step, carry, seq)
+        return carry, jnp.moveaxis(ys, 0, 1)  # [B, chunk, H, hd]
+
+    c0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    n0 = jnp.zeros((b, h, hd), jnp.float32)
+    m0 = jnp.zeros((b, h), jnp.float32)
+    carry, ys = jax.lax.scan(
+        chunk_body, (c0, n0, m0),
+        tuple(jnp.moveaxis(t, 1, 0) for t in (qc, kc, vc, ic, fc)),
+    )
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, di).astype(x.dtype)
+    y = rms_norm(y, params["out_norm"])
+    y = y * jax.nn.silu(z)
+    return y @ params["down_proj"], MLstmState(*carry)
+
+
+def mlstm_train(params, cfg, x):
+    y, _ = _mlstm_scan(params, cfg, x)
+    return y
+
+
+def init_mlstm_state(cfg, batch: int) -> MLstmState:
+    di = int(cfg.xlstm_proj_factor * cfg.d_model)
+    h = cfg.n_heads
+    hd = di // h
+    return MLstmState(
+        c=jnp.zeros((batch, h, hd, hd), jnp.float32),
+        n=jnp.zeros((batch, h, hd), jnp.float32),
+        m=jnp.zeros((batch, h), jnp.float32),
+    )
+
+
+def mlstm_decode(params, cfg, x, state: MLstmState):
+    b = x.shape[0]
+    di = int(cfg.xlstm_proj_factor * cfg.d_model)
+    h = cfg.n_heads
+    hd = di // h
+    up = x[:, 0] @ params["up_proj"]
+    xz, z = jnp.split(up, 2, axis=-1)
+    q, k, v, i_gate, f_gate = _mlstm_qkv(params, xz[:, None], h, hd)
+    carry, y = _mlstm_step(
+        (state.c, state.n, state.m),
+        (q[:, 0], k[:, 0], v[:, 0], i_gate[:, 0], f_gate[:, 0]),
+        hd,
+    )
+    y = y.reshape(b, di).astype(x.dtype)
+    y = rms_norm(y, params["out_norm"])
+    y = y * jax.nn.silu(z)
+    return (y @ params["down_proj"])[:, None], MLstmState(*carry)
+
+
+# --------------------------------------------------------------------------
+# sLSTM
+# --------------------------------------------------------------------------
+
+def init_slstm(key, cfg, dtype):
+    d = cfg.d_model
+    di = int(cfg.xlstm_proj_factor * d)
+    ks = jax.random.split(key, 4)
+    return {
+        "up_proj": init_dense(ks[0], d, di, dtype)["w"],
+        "w_gates": init_dense(ks[1], di, 4 * di, jnp.float32)["w"],  # z i f o
+        "r_gates": (jax.random.normal(ks[2], (di, 4 * di)) * di ** -0.5).astype(
+            jnp.float32
+        ),
+        "b_gates": jnp.zeros((4 * di,), jnp.float32),
+        "down_proj": init_dense(ks[3], di, d, dtype)["w"],
+    }
+
+
+def _slstm_step(params, carry, x_t):
+    c, n, m, h = carry  # [B, di] each
+    di = c.shape[-1]
+    pre = (
+        x_t.astype(jnp.float32) @ params["w_gates"]
+        + h @ params["r_gates"]
+        + params["b_gates"]
+    )
+    z, i, f, o = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(z)
+    o = jax.nn.sigmoid(o)
+    f = jax.nn.log_sigmoid(f)
+    m_new = jnp.maximum(f + m, i)
+    i_eff = jnp.exp(i - m_new)
+    f_eff = jnp.exp(f + m - m_new)
+    c = f_eff * c + i_eff * z
+    n = f_eff * n + i_eff
+    h_new = o * c / jnp.maximum(n, 1e-6)
+    return (c, n, m_new, h_new), h_new
+
+
+def _slstm_scan(params, cfg, x):
+    b, s, _ = x.shape
+    di = params["b_gates"].shape[0] // 4
+    up = x @ params["up_proj"]
+    chunk = _CHUNK if s % _CHUNK == 0 else s
+    n_chunks = s // chunk
+    upc = up.reshape(b, n_chunks, chunk, di)
+
+    @jax.checkpoint
+    def chunk_body(carry, xc):
+        def step(c, x_t):
+            return _slstm_step(params, c, x_t)
+
+        carry, hs = jax.lax.scan(step, carry, jnp.moveaxis(xc, 1, 0))
+        return carry, jnp.moveaxis(hs, 0, 1)
+
+    zeros = jnp.zeros((b, di), jnp.float32)
+    carry, hs = jax.lax.scan(
+        chunk_body, (zeros, zeros, zeros, zeros), jnp.moveaxis(upc, 1, 0)
+    )
+    y = jnp.moveaxis(hs, 0, 1).reshape(b, s, di).astype(x.dtype)
+    return y @ params["down_proj"], SLstmState(*carry)
+
+
+def slstm_train(params, cfg, x):
+    y, _ = _slstm_scan(params, cfg, x)
+    return y
+
+
+def init_slstm_state(cfg, batch: int) -> SLstmState:
+    di = int(cfg.xlstm_proj_factor * cfg.d_model)
+    z = jnp.zeros((batch, di), jnp.float32)
+    return SLstmState(c=z, n=z, m=z, h=z)
+
+
+def slstm_decode(params, cfg, x, state: SLstmState):
+    up = x[:, 0] @ params["up_proj"]
+    carry, h = _slstm_step(params, tuple(state), up)
+    y = h.astype(x.dtype)[:, None]
+    return y @ params["down_proj"], SLstmState(*carry)

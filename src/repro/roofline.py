@@ -1,0 +1,314 @@
+"""Roofline analysis (deliverable g).
+
+Three terms per (arch × shape × mesh), from the compiled dry-run artifact:
+
+  compute term    = HLO_FLOPs   / (chips × peak_FLOP/s)
+  memory term     = HLO_bytes   / (chips × HBM_bw)
+  collective term = collective_bytes / (chips × link_bw)
+
+Hardware constants (TPU v5e target): 197 TFLOP/s bf16/chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE, which
+undercounts scan-over-layers models by ~n_layers×.  We therefore run our own
+static analyzer over ``compiled.as_text()``:
+
+  * parse every computation + its op lines into shape tables,
+  * read the loop trip counts XLA annotates
+    (``backend_config={"known_trip_count":{"n":...}}``),
+  * propagate weights over the call graph (while bodies multiply by trip
+    count; fusions/reductions inherit the caller weight),
+  * FLOPs  = Σ weighted dot ops (2 · |out| · |contraction|),
+  * bytes  = Σ weighted (operands + outputs) of *top-level* ops (post-fusion
+    — fusion internals excluded, so fused elementwise chains count once),
+  * collective_bytes = Σ weighted output bytes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute.
+
+All values are per-device (the SPMD module is per-device); the roofline
+divides totals by per-chip peaks directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+__all__ = [
+    "PEAK_FLOPS", "HBM_BW", "LINK_BW",
+    "HloStats", "analyze_hlo", "collective_bytes_from_hlo",
+    "model_flops", "roofline_report",
+]
+
+PEAK_FLOPS = 197e12  # bf16 FLOP/s per chip
+HBM_BW = 819e9       # bytes/s per chip
+LINK_BW = 50e9       # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z]\w*)\[([\d,]*)\]")
+_COMP_HEADER_RE = re.compile(
+    r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->\s*.*\{\s*$"
+)
+# NB: tuple types contain `/*index=5*/` comments (with '='), so the type
+# part is a lazy `.*?` up to the first `word(` — which is the opcode.
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s*([\w\-]+)\(")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "while",
+    "conditional", "call", "bitcast-convert",
+}
+
+_COLLECTIVES = {
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-gather-start", "all-reduce-start",
+    "collective-permute-start", "all-to-all-start",
+}
+
+
+def _shape_list(type_str: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dims = [int(d) for d in m.group(2).split(",") if d] if m.group(2) else []
+        out.append((m.group(1), dims))
+    return out
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _shape_list(type_str):
+        nb = _DTYPE_BYTES.get(dtype)
+        if nb is None:
+            continue
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * nb
+    return total
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    is_entry: bool
+    ops: list
+    shapes: dict  # symbol -> type string
+
+
+def _parse(hlo: str) -> dict[str, "_Computation"]:
+    comps: dict[str, _Computation] = {}
+    cur: Optional[_Computation] = None
+    for line in hlo.splitlines():
+        h = _COMP_HEADER_RE.match(line)
+        if h:
+            cur = _Computation(h.group(2), bool(h.group(1)), [], {})
+            comps[cur.name] = cur
+            # parameter shapes from the header
+            for pm in re.finditer(r"%?([\w.\-]+)\s*:\s*(\(?[\w\[\],\s]+\)?)", h.group(3)):
+                cur.shapes[pm.group(1)] = pm.group(2)
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            name, type_str, opcode = m.group(1), m.group(2), m.group(3)
+            cur.ops.append(_Op(name, type_str, opcode, line))
+            cur.shapes[name] = type_str
+    return comps
+
+
+def _weights(comps: dict[str, "_Computation"]) -> dict[str, float]:
+    """Propagate execution weights from ENTRY over the call graph."""
+    w = {name: 0.0 for name in comps}
+    entry = next((n for n, c in comps.items() if c.is_entry), None)
+    if entry is None:
+        entry = max(comps, key=lambda n: len(comps[n].ops), default=None)
+    if entry is None:
+        return w
+    w[entry] = 1.0
+    # fixed-point propagation (call graph is a DAG; few passes suffice)
+    for _ in range(30):
+        changed = False
+        for name, comp in comps.items():
+            base = w.get(name, 0.0)
+            if base == 0.0:
+                continue
+            for op in comp.ops:
+                if op.opcode == "while":
+                    trip = 1
+                    tm = _TRIP_RE.search(op.line)
+                    if tm:
+                        trip = int(tm.group(1))
+                    bm = _BODY_RE.search(op.line)
+                    cm = _COND_RE.search(op.line)
+                    if bm and bm.group(1) in w:
+                        nv = base * trip
+                        if nv > w[bm.group(1)]:
+                            w[bm.group(1)] = nv
+                            changed = True
+                    if cm and cm.group(1) in w:
+                        nv = base * (trip + 1)
+                        if nv > w[cm.group(1)]:
+                            w[cm.group(1)] = nv
+                            changed = True
+                else:
+                    for cm in _CALLS_RE.finditer(op.line):
+                        callee = cm.group(1)
+                        if callee in w and base > w[callee]:
+                            w[callee] = base
+                            changed = True
+        if not changed:
+            break
+    return w
+
+
+def _dot_flops(op: _Op, shapes: dict) -> float:
+    """2 · |output| · |lhs contraction dims|."""
+    out_elems = 0
+    for dtype, dims in _shape_list(op.type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        out_elems += n
+    args = re.findall(r"\(%?([\w.\-]+)[,)]", "(" + op.line.split("(", 1)[1])
+    lhs_shape = None
+    margs = re.search(r"\bdot\(\s*%?([\w.\-]+)\s*,", op.line)
+    if margs:
+        lhs = margs.group(1)
+        lhs_type = shapes.get(lhs)
+        if lhs_type:
+            sl = _shape_list(lhs_type)
+            if sl:
+                lhs_shape = sl[0][1]
+    contract = 1
+    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    if mc and lhs_shape is not None:
+        for d in mc.group(1).split(","):
+            if d:
+                idx = int(d)
+                if idx < len(lhs_shape):
+                    contract *= lhs_shape[idx]
+    return 2.0 * out_elems * contract
+
+
+def _op_bytes(op: _Op, shapes: dict) -> int:
+    total = _shape_bytes(op.type_str)
+    # operand references within the call parens
+    tail = op.line.split("(", 1)[1] if "(" in op.line else ""
+    tail = tail.split("metadata=")[0]
+    for m in re.finditer(r"%([\w.\-]+)", tail):
+        t = shapes.get(m.group(1))
+        if t:
+            total += _shape_bytes(t)
+    return total
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float
+    bytes_accessed: float
+    collective_bytes: float
+    collective_counts: dict
+
+
+def analyze_hlo(hlo: str) -> HloStats:
+    comps = _parse(hlo)
+    w = _weights(comps)
+    flops = 0.0
+    byts = 0.0
+    coll = 0.0
+    coll_counts: dict[str, float] = {}
+
+    # computations reachable only as fusion bodies shouldn't double-count
+    # bytes; identify fusion/reduce bodies
+    fusion_bodies: set[str] = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode in ("fusion", "reduce", "reduce-window", "sort",
+                             "scatter", "select-and-scatter", "map"):
+                for cm in _CALLS_RE.finditer(op.line):
+                    fusion_bodies.add(cm.group(1))
+
+    for name, comp in comps.items():
+        weight = w.get(name, 0.0)
+        if weight == 0.0:
+            continue
+        inside_fusion = name in fusion_bodies
+        for op in comp.ops:
+            if op.opcode == "dot":
+                flops += weight * _dot_flops(op, comp.shapes)
+            elif op.opcode == "convolution":
+                # rare here (no conv frontends); approximate via output*2
+                flops += weight * 2.0 * _shape_bytes(op.type_str)
+            if inside_fusion:
+                continue
+            if op.opcode in _FREE_OPS:
+                continue
+            if op.opcode in _COLLECTIVES:
+                cb = weight * _shape_bytes(op.type_str)
+                coll += cb
+                key = op.opcode.replace("-start", "")
+                coll_counts[key] = coll_counts.get(key, 0.0) + cb
+            byts += weight * _op_bytes(op, comp.shapes)
+    return HloStats(flops, byts, coll, coll_counts)
+
+
+def collective_bytes_from_hlo(hlo: str) -> float:
+    return analyze_hlo(hlo).collective_bytes
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS: 6·N·D (training) / 2·N·D (inference forward),
+    with N = active params and D = processed tokens."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch  # one token per sequence
+    return 2.0 * n * tokens
+
+
+def roofline_report(record: dict, cfg, shape) -> dict:
+    chips = record["chips"]
+    flops = float(record["flops_total"])          # per-device
+    bytes_acc = float(record["bytes_accessed"])   # per-device
+    coll = float(record["collective_bytes"])      # per-device
+
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_acc / HBM_BW
+    collective_s = coll / LINK_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    return {
+        **terms,
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_flops_ratio": (mf / (flops * chips)) if flops else None,
+        "step_time_lower_bound_s": max(terms.values()),
+        "mfu_upper_bound": (
+            (mf / (chips * PEAK_FLOPS)) / max(max(terms.values()), 1e-12)
+            if flops else None
+        ),
+    }

@@ -1,0 +1,23 @@
+"""RT serving runtime: the paper's scheduler wired to the model substrate.
+
+task_spec.py   model-serving job -> RTGPU (CL, ML, G) task chain, with GPU
+               parameters taken from the dry-run roofline artifact
+admission.py   Algorithm-2 admission control over mesh slices
+simulator.py   discrete-event federated executor (Figs. 12-13 analogue)
+executor.py    wall-clock best-effort executor for real small models (demo)
+"""
+from .admission import AdmissionController, AdmissionDecision
+from .executor import Service, WallClockExecutor
+from .simulator import SimResult, simulate
+from .task_spec import ServingTaskSpec, serving_task_to_rt
+
+__all__ = [
+    "AdmissionController",
+    "AdmissionDecision",
+    "SimResult",
+    "simulate",
+    "ServingTaskSpec",
+    "serving_task_to_rt",
+    "Service",
+    "WallClockExecutor",
+]

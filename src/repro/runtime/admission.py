@@ -1,0 +1,91 @@
+"""Admission control: Algorithm 2 as a serving-cluster front door.
+
+The controller owns ``gn_total`` accelerator slices (e.g. the 16-chip
+"model"-axis groups of the production mesh).  Every admitted task gets a
+*dedicated* slice allocation (federated — no preemption needed) and the
+bus/CPU schedulability is re-verified on each admission with the full
+RTGPU analysis.  Rejected tasks leave the system state untouched.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+from repro.core import (
+    FederatedResult,
+    RTTask,
+    TaskSet,
+    analyze_rtgpu,
+    analyze_rtgpu_plus,
+    schedule,
+)
+
+__all__ = ["AdmissionController", "AdmissionDecision"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionDecision:
+    admitted: bool
+    alloc: Optional[dict]          # task name -> GN_i slices
+    reason: str = ""
+    result: Optional[FederatedResult] = None
+
+
+class AdmissionController:
+    def __init__(
+        self,
+        gn_total: int,
+        tightened: bool = True,
+        mode: str = "greedy+grid",
+        max_candidates: int = 2000,
+    ):
+        self.gn_total = gn_total
+        self.analyzer = analyze_rtgpu_plus if tightened else analyze_rtgpu
+        self.mode = mode
+        self.max_candidates = max_candidates
+        self._tasks: list[RTTask] = []
+        self._alloc: dict[str, int] = {}
+
+    @property
+    def tasks(self) -> tuple[RTTask, ...]:
+        return tuple(self._tasks)
+
+    @property
+    def allocation(self) -> dict:
+        return dict(self._alloc)
+
+    def admit(self, task: RTTask) -> AdmissionDecision:
+        candidate = TaskSet.deadline_monotonic(self._tasks + [task])
+        res = schedule(
+            candidate,
+            self.gn_total,
+            analyzer=self.analyzer,
+            mode=self.mode,
+            max_candidates=self.max_candidates,
+        )
+        if not res.schedulable:
+            return AdmissionDecision(
+                False, None,
+                reason="schedulability test failed under every allocation",
+                result=res,
+            )
+        self._tasks = list(candidate.tasks)
+        self._alloc = {
+            t.name: g for t, g in zip(candidate.tasks, res.alloc)
+        }
+        return AdmissionDecision(True, dict(self._alloc), result=res)
+
+    def remove(self, name: str) -> bool:
+        before = len(self._tasks)
+        self._tasks = [t for t in self._tasks if t.name != name]
+        self._alloc.pop(name, None)
+        return len(self._tasks) < before
+
+    def current_taskset(self) -> Optional[TaskSet]:
+        if not self._tasks:
+            return None
+        return TaskSet.deadline_monotonic(self._tasks)
+
+    def current_alloc_list(self) -> list[int]:
+        ts = self.current_taskset()
+        return [self._alloc[t.name] for t in ts] if ts else []

@@ -1,0 +1,122 @@
+"""Batched serving engine: prefill + decode loop with KV-cache management
+and samplers, usable standalone or under the RT admission runtime.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import Model, ModelConfig
+
+__all__ = ["ServeConfig", "ServingEngine", "sample_greedy", "sample_topk"]
+
+
+def sample_greedy(key, logits):
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def sample_topk(key, logits, k: int = 40, temperature: float = 0.8):
+    v, idx = jax.lax.top_k(logits, k)
+    v = v / temperature
+    choice = jax.random.categorical(key, v, axis=-1)
+    return jnp.take_along_axis(idx, choice[..., None], axis=-1)[..., 0].astype(
+        jnp.int32
+    )
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_context: int = 512
+    batch: int = 4
+    sampler: str = "greedy"  # greedy | topk
+
+
+class ServingEngine:
+    """One model, fixed batch slots, continuous decode."""
+
+    def __init__(self, cfg: ModelConfig, serve: ServeConfig, params=None,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.serve = serve
+        self.model = Model(cfg)
+        key = jax.random.PRNGKey(seed)
+        self.params = params if params is not None else self.model.init_params(key)
+        self._sample = sample_greedy if serve.sampler == "greedy" else sample_topk
+
+        model = self.model
+
+        @jax.jit
+        def prefill_fn(params, tokens, caches, *extra):
+            kw = {}
+            i = 0
+            if cfg.n_patches:
+                kw["extra_embeds"] = extra[i]; i += 1
+            if cfg.is_encoder_decoder:
+                kw["enc_embeds"] = extra[i]; i += 1
+            logits, caches, _ = model.prefill(params, tokens, caches, **kw)
+            return logits, caches
+
+        @jax.jit
+        def decode_fn(params, token, caches, cache_len):
+            return model.decode_step(params, token, caches, cache_len)
+
+        self._prefill = prefill_fn
+        self._decode = decode_fn
+
+    def generate(
+        self,
+        prompts: np.ndarray,           # [B, S] int32
+        max_new_tokens: int = 16,
+        extra_embeds=None,
+        enc_embeds=None,
+        key=None,
+    ) -> tuple[np.ndarray, dict]:
+        b, s = prompts.shape
+        assert b == self.serve.batch
+        key = key if key is not None else jax.random.PRNGKey(0)
+        caches = self.model.init_caches(b, self.serve.max_context)
+        extra = []
+        offset = 0
+        if self.cfg.n_patches:
+            if extra_embeds is None:
+                extra_embeds = jnp.zeros(
+                    (b, self.cfg.n_patches, self.cfg.d_model), jnp.float32
+                )
+            extra.append(extra_embeds)
+            offset = self.cfg.n_patches
+        if self.cfg.is_encoder_decoder:
+            if enc_embeds is None:
+                enc_embeds = jnp.zeros(
+                    (b, self.cfg.enc_ctx, self.cfg.d_model), jnp.float32
+                )
+            extra.append(enc_embeds)
+
+        t0 = time.perf_counter()
+        logits, caches = self._prefill(
+            self.params, jnp.asarray(prompts), caches, *extra
+        )
+        prefill_s = time.perf_counter() - t0
+
+        out = np.zeros((b, max_new_tokens), np.int32)
+        cache_len = jnp.full((b,), s + offset, jnp.int32)
+        tok = self._sample(key, logits[:, -1, :])[:, None]
+        decode_t = []
+        for i in range(max_new_tokens):
+            out[:, i] = np.asarray(tok[:, 0])
+            t1 = time.perf_counter()
+            logits, caches = self._decode(self.params, tok, caches, cache_len)
+            decode_t.append(time.perf_counter() - t1)
+            cache_len = cache_len + 1
+            key, sub = jax.random.split(key)
+            tok = self._sample(sub, logits[:, -1, :])[:, None]
+        stats = {
+            "prefill_s": prefill_s,
+            "decode_s_per_tok": float(np.mean(decode_t)) if decode_t else 0.0,
+            "tokens": b * max_new_tokens,
+        }
+        return out, stats

@@ -1,0 +1,4 @@
+"""Training substrate: optimizer, trainer loop, checkpointing."""
+from .optimizer import AdamWConfig, OptState, adamw_update, cosine_lr, init_opt_state
+
+__all__ = ["AdamWConfig", "OptState", "adamw_update", "cosine_lr", "init_opt_state"]

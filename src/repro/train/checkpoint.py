@@ -1,0 +1,69 @@
+"""Msgpack checkpointing for param/optimizer pytrees (host-local)."""
+from __future__ import annotations
+
+import pathlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]
+
+_EXT = ".msgpack"
+
+
+def _encode(tree: Any) -> bytes:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    payload = {
+        "treedef": str(treedef),
+        "leaves": [
+            {
+                "dtype": str(np.asarray(x).dtype),
+                "shape": list(np.asarray(x).shape),
+                "data": np.ascontiguousarray(np.asarray(x)).tobytes(),
+            }
+            for x in leaves
+        ],
+    }
+    return msgpack.packb(payload)
+
+
+def save_checkpoint(dirpath, step: int, params, opt_state=None) -> pathlib.Path:
+    d = pathlib.Path(dirpath)
+    d.mkdir(parents=True, exist_ok=True)
+    blob = {"step": step, "params": _encode(params)}
+    if opt_state is not None:
+        blob["opt_state"] = _encode(opt_state)
+    out = d / f"step_{step:08d}{_EXT}"
+    out.write_bytes(msgpack.packb(blob))
+    return out
+
+
+def _decode(buf: bytes, like: Any) -> Any:
+    payload = msgpack.unpackb(buf)
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    leaves = []
+    for meta, ref in zip(payload["leaves"], leaves_like):
+        arr = np.frombuffer(meta["data"], dtype=np.dtype(meta["dtype"]))
+        arr = arr.reshape(meta["shape"])
+        leaves.append(jnp.asarray(arr, dtype=ref.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def load_checkpoint(path, params_like, opt_like=None):
+    blob = msgpack.unpackb(pathlib.Path(path).read_bytes())
+    params = _decode(blob["params"], params_like)
+    opt = None
+    if opt_like is not None and "opt_state" in blob:
+        opt = _decode(blob["opt_state"], opt_like)
+    return blob["step"], params, opt
+
+
+def latest_step(dirpath) -> int | None:
+    d = pathlib.Path(dirpath)
+    if not d.exists():
+        return None
+    steps = sorted(int(p.stem.split("_")[1]) for p in d.glob(f"step_*{_EXT}"))
+    return steps[-1] if steps else None

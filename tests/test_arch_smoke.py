@@ -1,0 +1,109 @@
+"""Per-architecture smoke tests: reduced variant of each assigned family,
+one forward/train step + one prefill/decode step on CPU, asserting output
+shapes and no NaNs.  Full configs are exercised only via the dry-run.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config, supports_shape
+from repro.models import Model
+
+B, S, CACHE = 2, 32, 64
+
+
+def _inputs(cfg, key):
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    labels = jax.random.randint(jax.random.fold_in(key, 1), (B, S), 0, cfg.vocab)
+    kw = {}
+    if cfg.n_patches:
+        kw["extra_embeds"] = (
+            jax.random.normal(key, (B, cfg.n_patches, cfg.d_model)) * 0.02
+        )
+    if cfg.is_encoder_decoder:
+        kw["enc_embeds"] = (
+            jax.random.normal(key, (B, cfg.enc_ctx, cfg.d_model)) * 0.02
+        )
+    return toks, labels, kw
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_smoke_reduced_variant(arch_id):
+    cfg = get_smoke_config(arch_id)
+    assert cfg.n_layers <= 4 and cfg.d_model <= 512
+    if cfg.n_experts:
+        assert cfg.n_experts <= 4
+    model = Model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init_params(key)
+    toks, labels, kw = _inputs(cfg, key)
+
+    # ---- one train step (loss + grads finite) ------------------------------
+    loss, grads = jax.value_and_grad(
+        lambda p: model.loss(p, toks, labels, **kw)
+    )(params)
+    assert np.isfinite(float(loss)), f"{arch_id}: non-finite loss"
+    for leaf in jax.tree_util.tree_leaves(grads):
+        assert np.isfinite(np.asarray(leaf, np.float32)).all(), (
+            f"{arch_id}: non-finite grad"
+        )
+
+    # ---- serve: prefill + one decode step -----------------------------------
+    caches = model.init_caches(B, CACHE)
+    logits, caches, _ = model.prefill(params, toks, caches, **kw)
+    assert logits.shape == (B, 1, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    cache_len = jnp.full((B,), S, jnp.int32)
+    logits2, caches = model.decode_step(params, tok, caches, cache_len)
+    assert logits2.shape == (B, 1, cfg.vocab)
+    assert np.isfinite(np.asarray(logits2, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_full_config_matches_assignment(arch_id):
+    """The full configs carry the exact assigned hyperparameters."""
+    expected = {
+        "dbrx-132b": (40, 6144, 48, 8, 10752, 100352, 16, 4),
+        "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536, 16, 2),
+        "olmo-1b": (16, 2048, 16, 16, 8192, 50304, 0, 0),
+        "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064, 16, 2),
+        "xlstm-350m": (24, 1024, 4, 4, 0, 50304, 0, 0),
+        "whisper-base": (6, 512, 8, 8, 2048, 51865, 0, 0),
+        "qwen3-0.6b": (28, 1024, 16, 8, 3072, 151936, 0, 0),
+        "deepseek-7b": (30, 4096, 32, 32, 11008, 102400, 0, 0),
+        "qwen3-14b": (40, 5120, 40, 8, 17408, 151936, 0, 0),
+        "internvl2-2b": (24, 2048, 16, 8, 8192, 92553, 0, 0),
+    }[arch_id]
+    cfg = get_config(arch_id)
+    got = (
+        cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff,
+        cfg.vocab, cfg.n_experts, cfg.top_k,
+    )
+    assert got == expected, f"{arch_id}: {got} != {expected}"
+
+
+def test_skip_table():
+    assert not supports_shape("whisper-base", "long_500k")
+    for arch in ARCH_IDS:
+        for shape in ("train_4k", "prefill_32k", "decode_32k"):
+            assert supports_shape(arch, shape)
+
+
+def test_param_counts_order_of_magnitude():
+    """Analytic param counts land near the advertised sizes."""
+    approx = {
+        "dbrx-132b": 132e9,
+        "jamba-v0.1-52b": 52e9,
+        "olmo-1b": 1.2e9,
+        "phi3.5-moe-42b-a6.6b": 42e9,
+        "xlstm-350m": 0.35e9,
+        "qwen3-0.6b": 0.6e9,
+        "deepseek-7b": 7e9,
+        "qwen3-14b": 14e9,
+        "internvl2-2b": 2e9,
+    }
+    for arch, target in approx.items():
+        n = get_config(arch).param_count()
+        assert 0.4 * target < n < 2.2 * target, f"{arch}: {n/1e9:.1f}B vs {target/1e9}B"

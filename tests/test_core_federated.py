@@ -1,0 +1,110 @@
+"""Tests for Algorithm 2 (grid search) and the greedy variant."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    GeneratorConfig,
+    TaskSet,
+    analyze_rtgpu,
+    generate_taskset,
+    greedy_search,
+    grid_search,
+    iter_allocations,
+    min_viable_alloc,
+    schedule,
+)
+from repro.core.federated import grid_search_dfs
+
+
+class TestEnumeration:
+    def test_iter_allocations_counts(self):
+        allocs = list(iter_allocations([1, 1], 4))
+        # (1,1),(1,2),(1,3),(2,1),(2,2),(3,1)
+        assert len(allocs) == 6
+        assert allocs[0] == (1, 1)
+        assert all(sum(a) <= 4 for a in allocs)
+
+    def test_respects_minimums(self):
+        allocs = list(iter_allocations([2, 1], 4))
+        assert all(a[0] >= 2 and a[1] >= 1 for a in allocs)
+
+    def test_lexicographic_order(self):
+        allocs = list(iter_allocations([1, 1, 1], 5))
+        assert allocs == sorted(allocs)
+
+
+class TestDfsEquivalence:
+    def test_dfs_matches_bruteforce_first_success(self):
+        """Prefix-DFS must return the same allocation as the paper's
+        brute-force nested loops (same order, same analysis)."""
+        rng = np.random.default_rng(11)
+        for u in (0.3, 0.5, 0.7):
+            for _ in range(5):
+                ts = generate_taskset(rng, u, GeneratorConfig(n_tasks=3))
+                dfs = grid_search_dfs(ts, 6)
+                mins = min_viable_alloc(ts, 6)
+                brute = None
+                if mins is not None:
+                    for alloc in iter_allocations(mins, 6):
+                        if analyze_rtgpu(ts, alloc).schedulable:
+                            brute = alloc
+                            break
+                assert dfs.alloc == brute
+                assert dfs.schedulable == (brute is not None)
+
+
+class TestGreedy:
+    def test_greedy_alloc_schedulable_when_found(self):
+        rng = np.random.default_rng(5)
+        ts = generate_taskset(rng, 0.4, GeneratorConfig())
+        res = greedy_search(ts, 10)
+        if res.schedulable:
+            assert analyze_rtgpu(ts, res.alloc).schedulable
+            assert sum(res.alloc) <= 10
+
+    def test_greedy_subset_of_grid(self):
+        """Anything greedy accepts, grid accepts too (grid is exhaustive)."""
+        rng = np.random.default_rng(9)
+        for _ in range(8):
+            ts = generate_taskset(rng, 0.6, GeneratorConfig(n_tasks=3))
+            g = greedy_search(ts, 6)
+            if g.schedulable:
+                assert grid_search(ts, 6).schedulable
+
+
+class TestScheduleApi:
+    def test_infeasible_set_rejected_fast(self):
+        rng = np.random.default_rng(1)
+        ts = generate_taskset(rng, 50.0, GeneratorConfig())
+        res = schedule(ts, 10)
+        assert not res.schedulable
+
+    def test_mode_validation(self):
+        rng = np.random.default_rng(1)
+        ts = generate_taskset(rng, 0.5, GeneratorConfig())
+        with pytest.raises(ValueError):
+            schedule(ts, 10, mode="nope")
+
+    def test_allocation_sums_within_budget(self):
+        rng = np.random.default_rng(2)
+        for _ in range(5):
+            ts = generate_taskset(rng, 0.4, GeneratorConfig())
+            res = schedule(ts, 10)
+            if res.schedulable:
+                assert sum(res.alloc) <= 10
+                assert all(g >= 1 for g in res.alloc)
+
+
+class TestMinViable:
+    def test_min_viable_none_when_impossible(self):
+        rng = np.random.default_rng(3)
+        ts = generate_taskset(rng, 100.0, GeneratorConfig())
+        assert min_viable_alloc(ts, 2) is None
+
+    def test_min_viable_fits_in_isolation(self):
+        rng = np.random.default_rng(4)
+        ts = generate_taskset(rng, 0.5, GeneratorConfig())
+        mins = min_viable_alloc(ts, 10)
+        assert mins is not None
+        for task, gn in zip(ts, mins):
+            assert task.min_span(2 * gn) <= task.deadline

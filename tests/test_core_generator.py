@@ -1,0 +1,103 @@
+"""Tests for the Table 1 taskset generator and the interleave model."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    GeneratorConfig,
+    INTERLEAVE_RATIO_MAX,
+    VirtualSMModel,
+    generate_taskset,
+    generate_tasksets,
+    throughput_gain_total,
+    throughput_gain_used,
+)
+
+
+class TestGenerator:
+    def test_structure_matches_table1(self):
+        rng = np.random.default_rng(0)
+        ts = generate_taskset(rng, 1.0, GeneratorConfig())
+        assert len(ts) == 5
+        for t in ts:
+            assert t.m == 5
+            assert t.n_gpu == 4
+            assert t.n_mem == 8
+            assert t.deadline == t.period  # implicit deadline
+            for j in range(t.m):
+                assert 1.0 <= t.cpu_hi[j] <= 20.0
+            for j in range(t.n_mem):
+                assert 1.0 <= t.mem_hi[j] <= 5.0
+            for g in t.gpu:
+                assert 1.0 <= g.work_hi <= 20.0
+                # ε = 12% launch overhead
+                assert g.overhead_hi == pytest.approx(0.12 * g.work_hi)
+                assert g.alpha in set(INTERLEAVE_RATIO_MAX.values())
+
+    def test_deadline_monotonic_priorities(self):
+        rng = np.random.default_rng(1)
+        ts = generate_taskset(rng, 1.0, GeneratorConfig())
+        ds = [t.deadline for t in ts]
+        assert ds == sorted(ds)
+
+    def test_total_utilization_normalized(self):
+        """Σ span_i / T_i == requested total utilization."""
+        rng = np.random.default_rng(2)
+        for target in (0.5, 1.0, 2.5):
+            ts = generate_taskset(rng, target, GeneratorConfig())
+            total = sum(
+                (sum(t.cpu_hi) + sum(t.mem_hi) + sum(g.work_hi for g in t.gpu))
+                / t.period
+                for t in ts
+            )
+            assert total == pytest.approx(target, rel=1e-9)
+
+    def test_variability_sets_lower_bounds(self):
+        rng = np.random.default_rng(3)
+        ts = generate_taskset(rng, 1.0, GeneratorConfig(variability=0.4))
+        for t in ts:
+            for lo, hi in zip(t.cpu_lo, t.cpu_hi):
+                assert lo == pytest.approx(0.6 * hi)
+
+    def test_scaled_ratios(self):
+        cfg = GeneratorConfig().scaled((1, 2, 8))
+        assert cfg.cpu_range == (1.0, 20.0)
+        assert cfg.mem_range == (2.0, 40.0)
+        assert cfg.gpu_range == (8.0, 160.0)
+
+    def test_one_copy_model(self):
+        rng = np.random.default_rng(4)
+        ts = generate_taskset(rng, 1.0, GeneratorConfig(copies=1))
+        for t in ts:
+            assert t.n_mem == t.m - 1
+
+    def test_reproducible(self):
+        a = generate_tasksets(seed=7, total_util=1.0, n_sets=3)
+        b = generate_tasksets(seed=7, total_util=1.0, n_sets=3)
+        for ta, tb in zip(a, b):
+            assert [t.deadline for t in ta] == [t.deadline for t in tb]
+
+
+class TestInterleave:
+    def test_virtual_sm_doubling(self):
+        m = VirtualSMModel(n_physical=28)
+        assert m.n_virtual == 56
+
+    def test_speedup_from_fig6_ratios(self):
+        m = VirtualSMModel(n_physical=1)
+        # 2/α > 1 whenever α < 2: interleaving always wins in throughput
+        for ktype in INTERLEAVE_RATIO_MAX:
+            assert 1.0 < m.speedup(ktype) <= 2.0
+
+    def test_eq9_eq10(self):
+        # paper Eq. 9/10 with one task on 5 of 10 SMs, α = 1.6
+        eta1 = throughput_gain_total([5], [1.6], 10)
+        assert eta1 == pytest.approx(0.5 * (2 / 1.6 - 1))
+        eta2 = throughput_gain_used([5], [1.6])
+        assert eta2 == pytest.approx(2 / 1.6 - 1)
+
+    def test_eta_range_matches_paper_10_to_38_percent(self):
+        """Fig. 14: 11%-38% throughput improvement over used resources."""
+        alphas = list(INTERLEAVE_RATIO_MAX.values())
+        gains = [throughput_gain_used([1], [a]) for a in alphas]
+        assert min(gains) >= 0.10
+        assert max(gains) <= 0.40

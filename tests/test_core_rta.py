@@ -1,0 +1,158 @@
+"""Tests for the RTGPU response-time analysis and Theorem 5.6."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    GeneratorConfig,
+    GpuSegment,
+    RTTask,
+    TaskSet,
+    analyze_rtgpu,
+    analyze_rtgpu_plus,
+    analyze_self_suspension,
+    analyze_stgm,
+    fixed_point,
+    generate_taskset,
+)
+
+
+def simple_task(deadline=100.0, period=100.0, m=2, name=""):
+    return RTTask(
+        cpu_lo=(1.0,) * m,
+        cpu_hi=(2.0,) * m,
+        mem_lo=(0.5,) * (2 * (m - 1)),
+        mem_hi=(1.0,) * (2 * (m - 1)),
+        gpu=tuple(GpuSegment(4.0, 8.0, 1.0, 1.5) for _ in range(m - 1)),
+        deadline=deadline,
+        period=period,
+        name=name,
+    )
+
+
+class TestFixedPoint:
+    def test_no_interference(self):
+        assert fixed_point(3.0, lambda t: 0.0, 10.0) == 3.0
+
+    def test_exceeds_limit(self):
+        assert math.isinf(fixed_point(3.0, lambda t: 100.0, 10.0))
+        assert math.isinf(fixed_point(30.0, lambda t: 0.0, 10.0))
+
+    def test_staircase(self):
+        # x = 1 + 2*ceil(x/10): smallest fp is x=3 (ceil(3/10)=1)
+        r = fixed_point(1.0, lambda t: 2.0 * math.ceil(t / 10.0), 100.0)
+        assert r == pytest.approx(3.0)
+
+
+class TestSingleTask:
+    def test_isolated_task_response_is_own_span(self):
+        """One task, no interference: R = Σ GR̂ + Σ ML̂ + Σ CL̂."""
+        t = simple_task()
+        a = analyze_rtgpu(TaskSet((t,)), [2])
+        ta = a.tasks[0]
+        _, ghi = t.gpu[0].response_bounds(4)
+        expected = ghi + 2 * 1.0 + 2 * 2.0
+        assert ta.response == pytest.approx(expected)
+        assert ta.schedulable
+
+    def test_tight_deadline_unschedulable(self):
+        t = simple_task(deadline=5.0, period=100.0)
+        a = analyze_rtgpu(TaskSet((t,)), [2])
+        assert not a.schedulable
+
+    def test_more_sms_help(self):
+        t = RTTask(
+            cpu_lo=(1.0, 1.0),
+            cpu_hi=(1.0, 1.0),
+            mem_lo=(0.5, 0.5),
+            mem_hi=(0.5, 0.5),
+            gpu=(GpuSegment(50.0, 50.0, 1.0, 1.8),),
+            deadline=16.0,
+            period=100.0,
+        )
+        assert not analyze_rtgpu(TaskSet((t,)), [2]).schedulable
+        assert analyze_rtgpu(TaskSet((t,)), [5]).schedulable
+
+
+class TestTwoTasks:
+    def test_interference_increases_response(self):
+        hi = simple_task(deadline=50.0, period=50.0, name="hi")
+        lo = simple_task(deadline=100.0, period=100.0, name="lo")
+        solo = analyze_rtgpu(TaskSet((lo,)), [2]).tasks[0].response
+        both = analyze_rtgpu(TaskSet((hi, lo)), [2, 2]).tasks[1].response
+        assert both > solo
+
+    def test_blocking_from_lower_priority_copy(self):
+        """Bus blocking: hp task's copy waits for one lp copy (Lemma 5.3)."""
+        hi = simple_task(deadline=50.0, period=50.0, name="hi")
+        lo_big_mem = RTTask(
+            cpu_lo=(1.0, 1.0),
+            cpu_hi=(1.0, 1.0),
+            mem_lo=(9.0, 9.0),
+            mem_hi=(9.0, 9.0),
+            gpu=(GpuSegment(1.0, 1.0, 0.1, 1.0),),
+            deadline=400.0,
+            period=400.0,
+        )
+        a = analyze_rtgpu(TaskSet((hi, lo_big_mem)), [1, 1])
+        # each of hi's copies suffers up to one 9ms blocking
+        assert all(r >= 1.0 + 9.0 for r in a.tasks[0].mem_resp_hi)
+
+    def test_theorem_5_6_min(self):
+        hi = simple_task(deadline=50.0, period=50.0)
+        lo = simple_task(deadline=100.0, period=100.0)
+        ta = analyze_rtgpu(TaskSet((hi, lo)), [2, 2]).tasks[1]
+        assert ta.response == min(ta.r1, ta.r2)
+
+
+class TestTightenedBound:
+    def test_rtgpu_plus_never_looser(self):
+        """R̂3 (beyond-paper) only ever tightens Theorem 5.6."""
+        rng = np.random.default_rng(42)
+        for _ in range(10):
+            ts = generate_taskset(rng, 0.8, GeneratorConfig())
+            alloc = [2] * len(ts)
+            base = analyze_rtgpu(ts, alloc)
+            plus = analyze_rtgpu_plus(ts, alloc)
+            for b, p in zip(base.tasks, plus.tasks):
+                assert p.response <= b.response + 1e-9
+
+    def test_rtgpu_plus_dominates_schedulability(self):
+        rng = np.random.default_rng(7)
+        for u in (0.5, 0.8, 1.2):
+            for _ in range(5):
+                ts = generate_taskset(rng, u, GeneratorConfig())
+                alloc = [2] * len(ts)
+                if analyze_rtgpu(ts, alloc).schedulable:
+                    assert analyze_rtgpu_plus(ts, alloc).schedulable
+
+
+class TestBaselines:
+    def test_stgm_single_task(self):
+        t = simple_task()
+        a = analyze_stgm(TaskSet((t,)), [2])
+        _, ghi = t.gpu[0].response_bounds(4)
+        assert a.tasks[0].response == pytest.approx(4.0 + 2.0 + ghi)
+
+    def test_stgm_worse_than_rtgpu_plus_long_suspensions(self):
+        """Paper §6.2.1: busy waiting collapses when GPU segments are long."""
+        cfg = GeneratorConfig().scaled((1, 2, 8))
+        rng = np.random.default_rng(0)
+        stgm_acc = plus_acc = 0
+        for _ in range(10):
+            ts = generate_taskset(rng, 1.0, cfg)
+            alloc = [2] * len(ts)
+            stgm_acc += analyze_stgm(ts, alloc).schedulable
+            plus_acc += analyze_rtgpu_plus(ts, alloc).schedulable
+        assert plus_acc >= stgm_acc
+
+    def test_self_suspension_worse_than_rtgpu(self):
+        """SS serializes GPU through the shared device; RTGPU federates it."""
+        rng = np.random.default_rng(3)
+        for u in (0.4, 0.8):
+            for _ in range(5):
+                ts = generate_taskset(rng, u, GeneratorConfig())
+                alloc = [2] * len(ts)
+                if analyze_self_suspension(ts, alloc).schedulable:
+                    assert analyze_rtgpu_plus(ts, alloc).schedulable

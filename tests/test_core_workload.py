@@ -1,0 +1,184 @@
+"""Unit + property tests for the workload functions (Lemmas 2.1/5.2/5.4)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    GpuSegment,
+    RTTask,
+    ResourceView,
+    cpu_view,
+    mem_view,
+    workload_fn,
+)
+from repro.core.workload import ViewTables
+
+
+def make_task(copies=2, m=3, cpu=2.0, mem=1.0, gw=4.0, gl=0.5, alpha=1.5,
+              deadline=40.0, period=50.0, lo_scale=0.5):
+    n_mem = copies * (m - 1)
+    return RTTask(
+        cpu_lo=tuple([cpu * lo_scale] * m),
+        cpu_hi=tuple([cpu] * m),
+        mem_lo=tuple([mem * lo_scale] * n_mem),
+        mem_hi=tuple([mem] * n_mem),
+        gpu=tuple(GpuSegment(gw * lo_scale, gw, gl, alpha) for _ in range(m - 1)),
+        deadline=deadline,
+        period=period,
+        copies=copies,
+    )
+
+
+class TestViews:
+    def test_cpu_view_matches_lemma_5_4_literal(self):
+        """CS_i(j) cases from Lemma 5.4, written out verbatim."""
+        t = make_task()
+        n_vsm = 4
+        v = cpu_view(t, n_vsm)
+        # m CPU segments as execution
+        assert v.exec_hi == (2.0, 2.0, 2.0)
+        # interior gap: ML̆(2j) + GR̆(j) + ML̆(2j+1)
+        gr_lo = (4.0 * 0.5) / n_vsm
+        expected_gap = 0.5 + gr_lo + 0.5
+        assert v.gap_lo == pytest.approx((expected_gap, expected_gap))
+        # first wrap: T - D (head = tail = 0 for CPU view)
+        assert v.first_wrap == pytest.approx(50.0 - 40.0)
+        # steady wrap: T - Σ CL̂ - Σ ML̆ - Σ GR̆
+        assert v.steady_wrap == pytest.approx(50.0 - 6.0 - 2 * expected_gap)
+
+    def test_mem_view_matches_lemma_5_2_literal(self):
+        t = make_task()
+        n_vsm = 4
+        v = mem_view(t, n_vsm)
+        assert v.exec_hi == (1.0,) * 4
+        gr_lo = 2.0 / n_vsm
+        # even copy -> GR̆ ; odd copy -> CL̆ of the middle CPU segment
+        assert v.gap_lo == pytest.approx((gr_lo, 1.0, gr_lo))
+        # first wrap: T - D + CL̆_{m-1} + CL̆_0
+        assert v.first_wrap == pytest.approx(10.0 + 1.0 + 1.0)
+        # steady wrap: T - Σ ML̂ - (middle CL̆) - Σ GR̆ = T - Σexec - Σgaps
+        assert v.steady_wrap == pytest.approx(50.0 - 4.0 - (2 * gr_lo + 1.0))
+
+    def test_one_copy_model_chain(self):
+        t = make_task(copies=1)
+        v = mem_view(t, 4)
+        assert v.exec_hi == (1.0, 1.0)
+        # gap between ML_j and ML_{j+1}: GR̆_j + CL̆_{j+1}
+        assert v.gap_lo == pytest.approx((2.0 / 4 + 1.0,))
+
+
+class TestWorkloadFn:
+    def test_tiny_window_partial_segment(self):
+        v = ResourceView((2.0, 3.0), (1.0,), first_wrap=5.0, steady_wrap=4.0, period=10.0)
+        assert workload_fn(v, 0, 1.0) == pytest.approx(1.0)  # partial first
+        assert workload_fn(v, 0, 2.0) == pytest.approx(2.0)  # exactly first
+        # first seg (2) + gap (1) + partial second
+        assert workload_fn(v, 0, 4.0) == pytest.approx(2.0 + 1.0)
+        assert workload_fn(v, 0, 6.0) == pytest.approx(2.0 + 3.0)
+
+    def test_wrap_cases(self):
+        v = ResourceView((2.0, 3.0), (1.0,), first_wrap=0.0, steady_wrap=4.0, period=10.0)
+        # h=1: seg1 (3) then immediately (first_wrap=0) next job's seg0
+        assert workload_fn(v, 1, 4.0) == pytest.approx(3.0 + 1.0)
+        assert workload_fn(v, 1, 5.0) == pytest.approx(3.0 + 2.0)
+
+    def test_zero_window(self):
+        v = ResourceView((2.0,), (), first_wrap=1.0, steady_wrap=1.0, period=4.0)
+        assert workload_fn(v, 0, 0.0) == 0.0
+        assert workload_fn(v, 0, -1.0) == 0.0
+
+    def test_monotone_in_t(self):
+        v = ResourceView((2.0, 3.0, 1.0), (1.0, 0.5), 2.0, 3.0, period=12.0)
+        prev = 0.0
+        for t in np.linspace(0, 12, 121):
+            w = workload_fn(v, 0, float(t))
+            assert w >= prev - 1e-12
+            prev = w
+
+
+@st.composite
+def task_views(draw):
+    """Views built from *real* random tasks via the paper's case analyses
+    (arbitrary hand-built ResourceViews can violate the period/wrap
+    invariants that _build_view guarantees)."""
+    m = draw(st.integers(2, 4))
+    copies = draw(st.sampled_from([1, 2]))
+    cpu = [draw(st.floats(0.2, 10.0)) for _ in range(m)]
+    mem = [draw(st.floats(0.1, 4.0)) for _ in range(copies * (m - 1))]
+    gw = [draw(st.floats(0.5, 15.0)) for _ in range(m - 1)]
+    alpha = draw(st.floats(1.0, 1.8))
+    lo_scale = draw(st.floats(0.3, 1.0))
+    span = sum(cpu) + sum(mem) + sum(gw)
+    slack = draw(st.floats(1.0, 4.0))
+    dslack = draw(st.floats(1.0, 2.0))
+    period = span * slack * dslack
+    task = RTTask(
+        cpu_lo=tuple(c * lo_scale for c in cpu),
+        cpu_hi=tuple(cpu),
+        mem_lo=tuple(x * lo_scale for x in mem),
+        mem_hi=tuple(mem),
+        gpu=tuple(GpuSegment(w * lo_scale, w, 0.12 * w, alpha) for w in gw),
+        deadline=span * slack,
+        period=period,
+        copies=copies,
+    )
+    n_vsm = draw(st.sampled_from([2, 4, 8]))
+    kind = draw(st.sampled_from(["cpu", "mem"]))
+    return cpu_view(task, n_vsm) if kind == "cpu" else mem_view(task, n_vsm)
+
+
+class TestViewTablesProperty:
+    @settings(max_examples=200, deadline=None)
+    @given(view=task_views(), t=st.floats(0.0, 200.0))
+    def test_tables_match_reference_loop(self, view, t):
+        """Vectorized max_h W^h(t) == python-loop reference."""
+        tabs = ViewTables(view)
+        ref = max(workload_fn(view, hh, t) for hh in range(view.k))
+        assert tabs.max_workload(t) == pytest.approx(ref, rel=1e-9, abs=1e-9)
+
+    @settings(max_examples=150, deadline=None)
+    @given(view=task_views(), t1=st.floats(0.0, 80.0), t2=st.floats(0.0, 80.0))
+    def test_subadditivity_over_window_split(self, view, t1, t2):
+        """max_h W(t1) + max_h W(t2) >= max_h W(t1+t2) for task-derived
+        views: the property the R̂3 tightening's soundness rests on."""
+        tabs = ViewTables(view)
+        assert (
+            tabs.max_workload(t1) + tabs.max_workload(t2)
+            >= tabs.max_workload(t1 + t2) - 1e-9
+        )
+
+    @settings(max_examples=100, deadline=None)
+    @given(view=task_views(), t=st.floats(0.0, 150.0))
+    def test_monotone(self, view, t):
+        tabs = ViewTables(view)
+        assert tabs.max_workload(t) <= tabs.max_workload(t * 1.25) + 1e-9
+
+
+class TestGpuSegment:
+    def test_lemma_5_1(self):
+        g = GpuSegment(work_lo=8.0, work_hi=10.0, overhead_hi=2.0, alpha=1.5)
+        lo, hi = g.response_bounds(4)
+        assert lo == pytest.approx(8.0 / 4)
+        assert hi == pytest.approx((10.0 * 1.5 - 2.0) / 4 + 2.0)
+
+    def test_clamped_at_overhead(self):
+        g = GpuSegment(work_lo=0.1, work_hi=0.2, overhead_hi=5.0, alpha=1.0)
+        _, hi = g.response_bounds(8)
+        assert hi == pytest.approx(5.0)
+
+    def test_more_sms_never_slower(self):
+        g = GpuSegment(3.0, 6.0, 1.0, 1.7)
+        prev = math.inf
+        for n in range(1, 30):
+            _, hi = g.response_bounds(n)
+            assert hi <= prev + 1e-12
+            prev = hi
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            GpuSegment(2.0, 1.0, 0.0)
+        with pytest.raises(ValueError):
+            GpuSegment(1.0, 2.0, 0.0, alpha=0.5)

@@ -1,0 +1,92 @@
+"""Launch-layer tests on the 1-device host mesh (the 512-device production
+meshes are exercised by launch/dryrun.py, which owns the XLA_FLAGS)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import build_bundle, input_specs
+from repro.models import INPUT_SHAPES, InputShape, Model
+from repro.roofline import analyze_hlo, model_flops
+
+
+def small_shape(kind):
+    return {
+        "train": InputShape("t", 64, 4, "train"),
+        "prefill": InputShape("p", 64, 4, "prefill"),
+        "decode": InputShape("d", 64, 4, "decode"),
+    }[kind]
+
+
+class TestStepBundles:
+    @pytest.mark.parametrize("kind", ["train", "prefill", "decode"])
+    def test_lower_compile_on_host_mesh(self, kind):
+        cfg = get_smoke_config("qwen3-0.6b")
+        mesh = make_host_mesh()
+        bundle = build_bundle(cfg, small_shape(kind), mesh)
+        with mesh:
+            compiled = jax.jit(
+                bundle.step_fn,
+                in_shardings=bundle.in_shardings,
+                donate_argnums=bundle.donate_argnums,
+            ).lower(*bundle.args).compile()
+        assert compiled.cost_analysis() is not None
+
+    def test_input_specs_cover_modalities(self):
+        cfg = get_smoke_config("internvl2-2b")
+        m = Model(cfg)
+        specs = input_specs(cfg, small_shape("prefill"), m)
+        assert "extra_embeds" in specs
+        cfg2 = get_smoke_config("whisper-base")
+        m2 = Model(cfg2)
+        specs2 = input_specs(cfg2, small_shape("train"), m2)
+        assert "enc_embeds" in specs2
+
+    def test_decode_specs_have_cache_and_len(self):
+        cfg = get_smoke_config("jamba-v0.1-52b")
+        m = Model(cfg)
+        specs = input_specs(cfg, small_shape("decode"), m)
+        assert "caches" in specs and "cache_len" in specs
+        assert specs["token"].shape == (4, 1)
+
+
+class TestHloAnalyzer:
+    def test_weighted_flops_and_collectives(self):
+        """Analyzer must multiply loop bodies by known_trip_count and
+        count dot flops from shapes."""
+        cfg = get_smoke_config("olmo-1b")
+        mesh = make_host_mesh()
+        bundle = build_bundle(cfg, small_shape("train"), mesh)
+        with mesh:
+            compiled = jax.jit(
+                bundle.step_fn, in_shardings=bundle.in_shardings,
+                donate_argnums=bundle.donate_argnums,
+            ).lower(*bundle.args).compile()
+        stats = analyze_hlo(compiled.as_text())
+        assert stats.flops > 0
+        assert stats.bytes_accessed > 0
+        # train flops should be within ~20x of 6ND (remat + attention etc.)
+        mf = model_flops(cfg, small_shape("train"))
+        assert 0.5 * mf < stats.flops < 30 * mf, (stats.flops, mf)
+
+    def test_trip_count_weighting_scales_with_layers(self):
+        """Twice the repeats -> roughly twice the analyzed flops."""
+        import dataclasses
+
+        cfg1 = get_smoke_config("olmo-1b")
+        cfg2 = dataclasses.replace(cfg1, n_repeats=4)
+        mesh = make_host_mesh()
+
+        def flops(cfg):
+            bundle = build_bundle(cfg, small_shape("train"), mesh)
+            with mesh:
+                compiled = jax.jit(
+                    bundle.step_fn, in_shardings=bundle.in_shardings,
+                    donate_argnums=bundle.donate_argnums,
+                ).lower(*bundle.args).compile()
+            return analyze_hlo(compiled.as_text()).flops
+
+        f1, f2 = flops(cfg1), flops(cfg2)
+        assert 1.5 < f2 / f1 < 2.6, (f1, f2)

@@ -1,0 +1,123 @@
+"""Integration tests: training reduces loss; checkpoint round-trip;
+serving engine decodes; data pipeline contracts."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.data import DataConfig, TokenPipeline
+from repro.models import LayerSpec, Model, ModelConfig
+from repro.serving import ServeConfig, ServingEngine
+from repro.train.checkpoint import latest_step, load_checkpoint, save_checkpoint
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+def tiny_cfg(vocab=256):
+    return ModelConfig(
+        name="tiny", arch_type="dense", d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=128, vocab=vocab, pattern=(LayerSpec("attn", "mlp"),),
+        n_repeats=2, tie_embeddings=True, dtype="float32",
+    )
+
+
+class TestDataPipeline:
+    def test_shapes_and_labels_shift(self):
+        p = TokenPipeline(DataConfig(vocab=100, seq_len=16, global_batch=4))
+        toks, labels = p.batch(0)
+        assert toks.shape == labels.shape == (4, 16)
+        assert toks.dtype == np.int32
+        assert (toks >= 0).all() and (toks < 100).all()
+
+    def test_deterministic_per_step(self):
+        p = TokenPipeline(DataConfig(vocab=100, seq_len=16, global_batch=4))
+        a, _ = p.batch(3)
+        b, _ = p.batch(3)
+        np.testing.assert_array_equal(a, b)
+        c, _ = p.batch(4)
+        assert not np.array_equal(a, c)
+
+    def test_host_sharding_disjoint_draws(self):
+        h0 = TokenPipeline(DataConfig(100, 16, 8, n_hosts=2, host_id=0))
+        h1 = TokenPipeline(DataConfig(100, 16, 8, n_hosts=2, host_id=1))
+        a, _ = h0.batch(0)
+        b, _ = h1.batch(0)
+        assert a.shape == (4, 16)
+        assert not np.array_equal(a, b)
+
+    def test_learnable_structure(self):
+        """bigram structure => next-token is predictable 80% of the time"""
+        p = TokenPipeline(DataConfig(vocab=50, seq_len=64, global_batch=8))
+        toks, labels = p.batch(0)
+        follows = p._next[toks]
+        agreement = (follows == labels).mean()
+        assert agreement > 0.6
+
+
+class TestTraining:
+    def test_loss_decreases(self):
+        cfg = tiny_cfg()
+        model = Model(cfg)
+        params = model.init_params(jax.random.PRNGKey(0))
+        opt_cfg = AdamWConfig(lr=3e-3, warmup_steps=2, total_steps=30)
+        opt_state = init_opt_state(params)
+        data = TokenPipeline(DataConfig(cfg.vocab, 32, 8))
+
+        @jax.jit
+        def step(params, opt_state, t, l):
+            loss, g = jax.value_and_grad(lambda p: model.loss(p, t, l))(params)
+            params, opt_state, _ = adamw_update(opt_cfg, params, g, opt_state)
+            return params, opt_state, loss
+
+        losses = []
+        for i in range(30):
+            t, l = data.batch(i)
+            params, opt_state, loss = step(params, opt_state,
+                                           jnp.asarray(t), jnp.asarray(l))
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] - 0.5, losses[::6]
+
+    def test_checkpoint_roundtrip(self, tmp_path):
+        cfg = tiny_cfg()
+        model = Model(cfg)
+        params = model.init_params(jax.random.PRNGKey(0))
+        opt = init_opt_state(params)
+        save_checkpoint(tmp_path, 7, params, opt)
+        assert latest_step(tmp_path) == 7
+        step, p2, o2 = load_checkpoint(
+            tmp_path / "step_00000007.msgpack", params, opt
+        )
+        assert step == 7
+        for a, b in zip(jax.tree_util.tree_leaves(params),
+                        jax.tree_util.tree_leaves(p2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestServingEngine:
+    def test_generate_shapes_and_determinism(self):
+        cfg = tiny_cfg()
+        eng = ServingEngine(cfg, ServeConfig(max_context=64, batch=2))
+        prompts = np.random.default_rng(0).integers(
+            0, cfg.vocab, (2, 16)
+        ).astype(np.int32)
+        out1, stats = eng.generate(prompts, max_new_tokens=5)
+        out2, _ = eng.generate(prompts, max_new_tokens=5)
+        assert out1.shape == (2, 5)
+        np.testing.assert_array_equal(out1, out2)  # greedy => deterministic
+        assert stats["tokens"] == 10
+
+    def test_decode_matches_forward(self):
+        """Greedy decode via cache == argmax of the full forward logits."""
+        cfg = tiny_cfg()
+        model = Model(cfg)
+        params = model.init_params(jax.random.PRNGKey(1))
+        b, s = 2, 12
+        toks = jax.random.randint(jax.random.PRNGKey(2), (b, s), 0, cfg.vocab)
+        # full forward: logits at the last position
+        hidden, _ = model.forward_train(params, toks)
+        full_logits = model._logits(params, hidden[:, -1:])
+        # cache path
+        caches = model.init_caches(b, 32)
+        pre_logits, caches, _ = model.prefill(params, toks, caches)
+        np.testing.assert_allclose(
+            np.asarray(full_logits), np.asarray(pre_logits), rtol=2e-4, atol=2e-4
+        )
