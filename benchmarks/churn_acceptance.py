@@ -1,0 +1,189 @@
+"""Online-scheduler churn benchmark: acceptance ratio + admission latency.
+
+Replays a sporadic arrival/departure trace through two admission paths:
+
+  warm   the online ``DynamicController`` — pinned 1-D search with
+         memoized per-task certification, falling back to the hint +
+         shared-view-table grid DFS (the subsystem's warm-start story);
+  cold   re-running Algorithm 2 (``schedule(..., mode="grid")``) from
+         scratch on the candidate set at every admission, exactly like the
+         pre-online-scheduler front door.
+
+Both see identical candidate sets and the same ``max_candidates`` budget,
+and must make identical decisions (asserted).  The speedup assertion is on
+*accepted* admissions against resident sets with n ≥ 6 — the re-allocation
+case the warm start exists for.  The same trace is then executed by
+``simulate_churn`` (boundary-mode controller) to confirm zero deadline
+misses and zero analytic-bound violations end to end.
+
+Emits ``BENCH_churn.json`` so the perf trajectory tracks scheduler latency.
+
+  PYTHONPATH=src python benchmarks/churn_acceptance.py [--out BENCH_churn.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.core import (
+    ChurnConfig,
+    GeneratorConfig,
+    TaskSet,
+    analyze_rtgpu_plus,
+    generate_churn_trace,
+    schedule,
+)
+from repro.runtime import simulate_churn
+from repro.sched import DynamicController
+
+GN_TOTAL = 10
+MAX_CANDIDATES = 400
+MIN_N_FOR_SPEEDUP = 6
+
+CONFIG = ChurnConfig(
+    mean_interarrival=250.0,
+    lifetime_range=(2500.0, 5000.0),
+    util_range=(0.05, 0.12),
+    task_config=GeneratorConfig(n_subtasks=3),
+)
+
+
+def replay_admissions(events, seed: int = 0) -> dict:
+    """Warm vs cold admission latency over one churn trace."""
+    warm = DynamicController(
+        GN_TOTAL, transition="instant", max_candidates=MAX_CANDIDATES
+    )
+    per_event = []
+    for ev in events:
+        if ev.kind == "release":
+            warm.release(ev.name)
+            continue
+        residents = [warm.task(n) for n in warm.order()]
+        cand = TaskSet.deadline_monotonic(residents + [ev.task])
+        t0 = time.perf_counter()
+        cold_res = schedule(
+            cand, GN_TOTAL, analyzer=analyze_rtgpu_plus, mode="grid",
+            max_candidates=MAX_CANDIDATES,
+        )
+        cold_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        dec = warm.admit(ev.task)
+        warm_s = time.perf_counter() - t0
+        # decisions must agree whenever NEITHER search hit its candidate
+        # budget; a truncated side may legitimately miss an allocation the
+        # other's search order reaches
+        if (cold_res.candidates_tried < MAX_CANDIDATES
+                and dec.tried < MAX_CANDIDATES):
+            assert dec.admitted == cold_res.schedulable, (
+                f"warm/cold disagree on {ev.name}"
+            )
+        per_event.append({
+            "name": ev.name,
+            "n": len(cand),
+            "admitted": dec.admitted,
+            "path": dec.path,
+            "warm_ms": warm_s * 1e3,
+            "cold_ms": cold_s * 1e3,
+            "warm_tried": dec.tried,
+            "cold_tried": cold_res.candidates_tried,
+        })
+
+    admits = [e for e in per_event]
+    accepted = [e for e in per_event if e["admitted"]]
+    acc_big = [e for e in accepted if e["n"] >= MIN_N_FOR_SPEEDUP]
+    warm_total = sum(e["warm_ms"] for e in admits)
+    cold_total = sum(e["cold_ms"] for e in admits)
+    out = {
+        "admission_events": len(admits),
+        "accepted": len(accepted),
+        "acceptance_ratio": len(accepted) / max(len(admits), 1),
+        "max_resident_n": max((e["n"] for e in accepted), default=0),
+        "warm_total_ms": round(warm_total, 3),
+        "cold_total_ms": round(cold_total, 3),
+        "speedup_all": round(cold_total / warm_total, 3),
+        "per_event": per_event,
+    }
+    if acc_big:
+        w = sum(e["warm_ms"] for e in acc_big)
+        c = sum(e["cold_ms"] for e in acc_big)
+        out["accepted_n6_events"] = len(acc_big)
+        out["warm_accepted_n6_ms"] = round(w, 3)
+        out["cold_accepted_n6_ms"] = round(c, 3)
+        out["speedup_accepted_n6"] = round(c / w, 3)
+    return out
+
+
+def run(rows: list | None = None, out: str = "BENCH_churn.json",
+        seed: int = 0, horizon: float = 6000.0) -> dict:
+    rows = rows if rows is not None else []
+    events = generate_churn_trace(seed=seed, horizon=horizon, config=CONFIG)
+    latency = replay_admissions(events, seed=seed)
+
+    # end-to-end validation under the boundary-mode protocol
+    sim = simulate_churn(events, GN_TOTAL, horizon + 1000.0, seed=seed)
+    violations = sim.bound_violations()
+    result = {
+        "config": {
+            "gn_total": GN_TOTAL,
+            "max_candidates": MAX_CANDIDATES,
+            "seed": seed,
+            "horizon_ms": horizon,
+            "churn_events": len(events),
+        },
+        "latency": latency,
+        "sim": {
+            "admitted": len(sim.admitted),
+            "rejected": len(sim.rejected),
+            "jobs": sim.total_jobs,
+            "deadline_misses": sum(sim.misses.values()),
+            "bound_violations": len(violations),
+        },
+    }
+
+    # hard checks: the acceptance criteria this benchmark exists to track
+    assert not sim.any_miss, f"deadline misses under churn: {sim.misses}"
+    assert not violations, f"analytic bound violated: {violations[:3]}"
+    assert latency["max_resident_n"] >= MIN_N_FOR_SPEEDUP, (
+        "trace never reached n >= 6 — retune CONFIG"
+    )
+    assert latency["speedup_accepted_n6"] > 1.0, (
+        "warm-start admission not faster than cold grid search: "
+        f"{latency['speedup_accepted_n6']}x"
+    )
+
+    with open(out, "w") as fh:
+        json.dump(result, fh, indent=2)
+    rows.append(("churn,acceptance_ratio", latency["acceptance_ratio"]))
+    rows.append(("churn,warm_total_ms", latency["warm_total_ms"]))
+    rows.append(("churn,cold_total_ms", latency["cold_total_ms"]))
+    rows.append(("churn,speedup_accepted_n6", latency["speedup_accepted_n6"]))
+    rows.append(("churn,sim_jobs", sim.total_jobs))
+    rows.append(("churn,sim_misses", sum(sim.misses.values())))
+    return result
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="BENCH_churn.json")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    result = run(out=args.out, seed=args.seed)
+    lat = result["latency"]
+    print(f"admissions {lat['admission_events']}  "
+          f"acceptance {lat['acceptance_ratio']:.2f}  "
+          f"max n {lat['max_resident_n']}")
+    print(f"warm {lat['warm_total_ms']:.1f} ms vs cold "
+          f"{lat['cold_total_ms']:.1f} ms  "
+          f"(accepted n>=6 speedup {lat.get('speedup_accepted_n6')}x)")
+    print(f"sim: {result['sim']['jobs']} jobs, "
+          f"{result['sim']['deadline_misses']} misses, "
+          f"{result['sim']['bound_violations']} bound violations")
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main())

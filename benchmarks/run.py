@@ -35,6 +35,7 @@ def main(argv=None) -> int:
         print(f"# {name} done in {time.time()-t:.1f}s", file=sys.stderr)
 
     from benchmarks import (
+        churn_acceptance,
         fig4_kernel_scaling,
         fig6_interleave,
         fig12_system_validation,
@@ -49,6 +50,7 @@ def main(argv=None) -> int:
     stage("fig10", sched_acceptance.fig10, n_sets, rows)
     stage("fig11", sched_acceptance.fig11, n_sets, rows)
     stage("fig12", fig12_system_validation.run, max(4, n_sets // 2), rows=rows)
+    stage("churn", churn_acceptance.run, rows)
     stage("roofline", roofline_table.run, rows)
     stage("roofline_multipod", roofline_table.run, rows, mesh="2x16x16")
 

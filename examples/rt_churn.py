@@ -1,0 +1,102 @@
+"""Live churn demo: three model services joining and leaving a running
+wall-clock executor, with the online scheduler doing admission and the
+whole run dumped as a Chrome trace.
+
+  PYTHONPATH=src python examples/rt_churn.py
+  # then open results/rt_churn_trace.json in chrome://tracing or Perfetto
+
+Timeline (wall clock, seconds):
+  0.0   chat + vision admitted and running
+  0.6   audio service asks to join (admitted against the transitional set)
+  1.4   vision deregisters — slices reclaimed at its job boundary
+  2.0   end; per-service stats + scheduler event counts printed
+
+Job bodies are calibrated busy-loops standing in for jitted decode steps
+(see examples/rt_serving.py for the real-engine variant) so the demo runs
+anywhere in ~2 s; the admission decisions, mode-change protocol, and the
+trace wiring are the real subsystem.
+"""
+import json
+import os
+import time
+
+from repro.runtime import Service, ServingTaskSpec, WallClockExecutor, serving_task_to_rt
+from repro.sched import DynamicController, EventTrace
+
+OUT = "results/rt_churn_trace.json"
+
+
+def busy_job(cost_s: float):
+    def job():
+        t0 = time.perf_counter()
+        while time.perf_counter() - t0 < cost_s:
+            pass
+    return job
+
+
+def spec(name, arch, period_ms, deadline_ms, step_ms):
+    return ServingTaskSpec(
+        name=name, arch_id=arch, period_ms=period_ms, deadline_ms=deadline_ms,
+        batch=2, seq_len=256, new_tokens=2,
+        roofline_step_s=step_ms / 1000.0, collective_s=2e-4,
+        dominant="compute_s",
+    )
+
+
+def main():
+    trace = EventTrace(us_per_unit=1e6, label="rt_churn")  # wall clock in s
+    controller = DynamicController(gn_total=8, trace=trace)
+
+    specs = {
+        "chat-qwen": spec("chat-qwen", "qwen3-0.6b", 50.0, 40.0, 2.0),
+        "vision-internvl": spec("vision-internvl", "internvl2-2b", 100.0, 80.0, 4.0),
+        "audio-whisper": spec("audio-whisper", "whisper-base", 150.0, 120.0, 1.5),
+    }
+    jobs = {"chat-qwen": 0.004, "vision-internvl": 0.008, "audio-whisper": 0.003}
+
+    def admit(name, t=0.0):
+        dec = controller.admit(serving_task_to_rt(specs[name]), t=t)
+        verdict = "ADMITTED" if dec.admitted else f"REJECTED ({dec.reason})"
+        print(f"[t={t:.1f}s] {name:16s} -> {verdict}"
+              + (f"  alloc={dec.alloc}" if dec.admitted else ""))
+        return dec.admitted
+
+    def service(name):
+        s = specs[name]
+        return Service(name, period_s=s.period_ms / 1e3,
+                       deadline_s=s.deadline_ms / 1e3, run_job=busy_job(jobs[name]))
+
+    # initial residents
+    initial = [service(n) for n in ("chat-qwen", "vision-internvl") if admit(n)]
+    ex = WallClockExecutor(initial, trace=trace)
+
+    def join_audio(executor):
+        if admit("audio-whisper", t=0.6):
+            executor.add_service(service("audio-whisper"))
+
+    def leave_vision(executor):
+        controller.release("vision-internvl", t=1.4)
+        executor.remove_service("vision-internvl")
+        controller.job_boundary("vision-internvl", t=1.4)
+        print("[t=1.4s] vision-internvl departed; "
+              f"free slices: {controller.free_capacity}/{controller.gn_total}")
+
+    stats = ex.run(duration_s=2.0, events=[(0.6, join_audio), (1.4, leave_vision)])
+
+    print("\nper-service stats:")
+    for name, st in stats.items():
+        print(f"  {name:16s} released={st['released']:3d} "
+              f"completed={st['completed']:3d} missed={st['missed']:2d} "
+              f"worst={st['worst_response_ms']:.1f} ms")
+    print("scheduler events:", dict(sorted(trace.counts().items())))
+
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    trace.dump(OUT)
+    n = len(trace)
+    print(f"\nwrote {OUT} ({n} events) — open in chrome://tracing")
+    with open(OUT) as fh:
+        assert json.load(fh)["traceEvents"]
+
+
+if __name__ == "__main__":
+    main()

@@ -21,6 +21,7 @@ from .workload import (
     workload_fn,
 )
 from .rta import (
+    AnalysisTables,
     SetAnalysis,
     TaskAnalysis,
     analyze_rtgpu,
@@ -36,7 +37,14 @@ from .federated import (
     schedule,
 )
 from .baselines import analyze_self_suspension, analyze_stgm
-from .generator import GeneratorConfig, generate_taskset, generate_tasksets
+from .generator import (
+    ChurnConfig,
+    ChurnEvent,
+    GeneratorConfig,
+    generate_churn_trace,
+    generate_taskset,
+    generate_tasksets,
+)
 from .interleave import (
     INTERLEAVE_RATIO_MAX,
     KERNEL_TYPES,
@@ -57,6 +65,7 @@ __all__ = [
     "suspension_oblivious_view",
     "workload_fn",
     "max_workload",
+    "AnalysisTables",
     "SetAnalysis",
     "TaskAnalysis",
     "analyze_rtgpu",
@@ -73,6 +82,9 @@ __all__ = [
     "GeneratorConfig",
     "generate_taskset",
     "generate_tasksets",
+    "ChurnConfig",
+    "ChurnEvent",
+    "generate_churn_trace",
     "INTERLEAVE_RATIO_MAX",
     "KERNEL_TYPES",
     "VirtualSMModel",

@@ -18,6 +18,7 @@ import math
 from typing import Callable, Iterator, Optional, Sequence
 
 from .rta import (
+    AnalysisTables,
     RtgpuIncremental,
     SetAnalysis,
     TaskAnalysis,
@@ -91,24 +92,43 @@ def grid_search_dfs(
     gn_total: int,
     tightened: bool = False,
     max_nodes: int = 1_000_000,
+    hint: Optional[Sequence[Optional[int]]] = None,
+    tables: Optional[AnalysisTables] = None,
 ) -> FederatedResult:
     """Algorithm 2 for the RTGPU analysis, with prefix pruning.
 
     Visits candidate allocations in the same lexicographic order as the
     paper's nested loops and returns the same first success, but evaluates
-    task k as soon as ``alloc[0..k]`` is fixed."""
+    task k as soon as ``alloc[0..k]`` is fixed.
+
+    Warm-start extensions (both default off, preserving the paper order):
+      * ``hint`` — a previous allocation, aligned with ``taskset`` order
+        (``None`` entries for tasks without history).  At each depth the
+        hinted GN_i is tried first, so a taskset that changed little since
+        the last search revalidates the old allocation in O(n) analyses.
+      * ``tables`` — a shared :class:`AnalysisTables`, so workload staircases
+        computed by earlier searches over overlapping task sets are reused.
+    """
     n = len(taskset)
     mins = min_viable_alloc(taskset, gn_total)
     if mins is None:
         return FederatedResult(False, None, None, 0)
-    inc = RtgpuIncremental(taskset, tightened=tightened)
+    inc = RtgpuIncremental(taskset, tightened=tightened, tables=tables)
     tried = 0
     found: list[TaskAnalysis] = []
+
+    def depth_order(k: int, lo: int, hi_inclusive: int) -> Iterator[int]:
+        h = hint[k] if hint is not None and k < len(hint) else None
+        if h is not None and lo <= h <= hi_inclusive:
+            yield h
+            yield from (g for g in range(lo, hi_inclusive + 1) if g != h)
+        else:
+            yield from range(lo, hi_inclusive + 1)
 
     def dfs(k: int, remaining: int, prefix: tuple[int, ...]) -> Optional[tuple[int, ...]]:
         nonlocal tried
         tail_min = sum(mins[k + 1 :])
-        for g in range(mins[k], remaining - tail_min + 1):
+        for g in depth_order(k, mins[k], remaining - tail_min):
             if tried >= max_nodes:
                 return None
             tried += 1
@@ -136,13 +156,18 @@ def grid_search(
     gn_total: int,
     analyzer: Analyzer = analyze_rtgpu,
     max_candidates: int = 1_000_000,
+    hint: Optional[Sequence[Optional[int]]] = None,
+    tables: Optional[AnalysisTables] = None,
 ) -> FederatedResult:
     """Algorithm 2 brute force for an arbitrary analyzer (used by baselines)."""
     if analyzer is analyze_rtgpu:
-        return grid_search_dfs(taskset, gn_total, max_nodes=max_candidates)
+        return grid_search_dfs(
+            taskset, gn_total, max_nodes=max_candidates, hint=hint, tables=tables
+        )
     if analyzer is analyze_rtgpu_plus:
         return grid_search_dfs(
-            taskset, gn_total, tightened=True, max_nodes=max_candidates
+            taskset, gn_total, tightened=True, max_nodes=max_candidates,
+            hint=hint, tables=tables,
         )
     mins = min_viable_alloc(taskset, gn_total)
     if mins is None:
@@ -194,15 +219,19 @@ def schedule(
     analyzer: Analyzer = analyze_rtgpu,
     mode: str = "grid",
     max_candidates: int = 1_000_000,
+    hint: Optional[Sequence[Optional[int]]] = None,
+    tables: Optional[AnalysisTables] = None,
 ) -> FederatedResult:
     """Entry point used by the runtime admission controller."""
     if mode == "grid":
-        return grid_search(taskset, gn_total, analyzer, max_candidates)
+        return grid_search(taskset, gn_total, analyzer, max_candidates,
+                           hint=hint, tables=tables)
     if mode == "greedy":
         return greedy_search(taskset, gn_total, analyzer)
     if mode == "greedy+grid":
         res = greedy_search(taskset, gn_total, analyzer)
         if res.schedulable:
             return res
-        return grid_search(taskset, gn_total, analyzer, max_candidates)
+        return grid_search(taskset, gn_total, analyzer, max_candidates,
+                           hint=hint, tables=tables)
     raise ValueError(f"unknown mode {mode!r}")

@@ -25,7 +25,14 @@ import numpy as np
 from .interleave import INTERLEAVE_RATIO_MAX, KERNEL_TYPES
 from .task import GpuSegment, RTTask, TaskSet
 
-__all__ = ["GeneratorConfig", "generate_taskset", "generate_tasksets"]
+__all__ = [
+    "GeneratorConfig",
+    "generate_taskset",
+    "generate_tasksets",
+    "ChurnConfig",
+    "ChurnEvent",
+    "generate_churn_trace",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -122,3 +129,70 @@ def generate_tasksets(
 ) -> list[TaskSet]:
     rng = np.random.default_rng(seed)
     return [generate_taskset(rng, total_util, config) for _ in range(n_sets)]
+
+
+# ---- sporadic arrival / departure traffic (online-scheduler churn) ----------
+
+
+@dataclasses.dataclass(frozen=True)
+class ChurnConfig:
+    """Sporadic service arrival/departure model for the online scheduler.
+
+    Services arrive as a Poisson process (exponential inter-arrival with
+    mean ``mean_interarrival``), each carrying one Table-1-style task drawn
+    at a per-service utilization ~ Uniform(*util_range*), and depart after
+    a lifetime ~ Uniform(*lifetime_range*).  The result is an explicit
+    admit/release event trace the dynamic controller and the churn
+    simulator consume (``repro.runtime.simulate_churn``).
+    """
+
+    mean_interarrival: float = 300.0           # ms between arrivals (mean)
+    lifetime_range: tuple[float, float] = (1500.0, 4000.0)   # ms resident
+    util_range: tuple[float, float] = (0.05, 0.15)           # per service
+    task_config: GeneratorConfig = GeneratorConfig(n_subtasks=3)
+
+
+@dataclasses.dataclass(frozen=True)
+class ChurnEvent:
+    """One churn-trace entry: a service asking to join or leave at ``time``.
+
+    ``kind`` is ``"admit"`` (with the service's RT task attached) or
+    ``"release"``.  A release is a *request* to depart — the mode-change
+    protocol reclaims the slices at the service's next job boundary.
+    """
+
+    time: float
+    kind: str                       # "admit" | "release"
+    name: str
+    task: "RTTask | None" = None
+
+
+def generate_churn_trace(
+    seed: int,
+    horizon: float,
+    config: ChurnConfig = ChurnConfig(),
+) -> list[ChurnEvent]:
+    """Arrival/departure event trace over ``[0, horizon)``, time-sorted.
+
+    Deterministic in ``seed``.  Every arrival inside the horizon gets a
+    matching release event (possibly beyond the horizon — the simulator
+    simply never reaches it), so admit/release events come in pairs."""
+    rng = np.random.default_rng(seed)
+    events: list[ChurnEvent] = []
+    t = 0.0
+    i = 0
+    while True:
+        t += float(rng.exponential(config.mean_interarrival))
+        if t >= horizon:
+            break
+        u = float(rng.uniform(*config.util_range))
+        cfg = dataclasses.replace(config.task_config, n_tasks=1)
+        task = generate_taskset(rng, u, cfg)[0]
+        name = f"svc{i}"
+        task = dataclasses.replace(task, name=name)
+        lifetime = float(rng.uniform(*config.lifetime_range))
+        events.append(ChurnEvent(time=t, kind="admit", name=name, task=task))
+        events.append(ChurnEvent(time=t + lifetime, kind="release", name=name))
+        i += 1
+    events.sort(key=lambda e: (e.time, e.name))
+    return events

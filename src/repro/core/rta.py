@@ -26,6 +26,7 @@ __all__ = [
     "fixed_point",
     "TaskAnalysis",
     "SetAnalysis",
+    "AnalysisTables",
     "analyze_rtgpu",
     "analyze_rtgpu_plus",
     "RtgpuIncremental",
@@ -97,6 +98,47 @@ class SetAnalysis:
         return tuple(t.response for t in self.tasks)
 
 
+class AnalysisTables:
+    """Persistent ``(task, GN) -> ViewTables`` cache shared across analyses.
+
+    :class:`~repro.core.task.RTTask` is a frozen dataclass, so the task object
+    itself keys the cache: two analyses of the *same* task at the *same*
+    allocation — even inside different task sets, priority orders, or
+    controller epochs — reuse one workload-staircase construction.  This is
+    the warm-start state the online scheduler threads through successive
+    admissions (ISSUE: reuse ``RtgpuIncremental`` prefix state).
+
+    ``fork()`` / ``adopt()`` give copy-on-success transactionality over the
+    *decision-affecting* state: an admission test runs against a fork, and
+    only a successful admission adopts the fork, so a rejected ``admit()``
+    leaves the key set (and every analysis outcome) unchanged.  The fork is
+    shallow — shared :class:`ViewTables` values may still warm their
+    internal deterministic ``t → workload`` caches during a rejected test,
+    which never changes any result.
+    """
+
+    def __init__(self) -> None:
+        self.mem: dict[tuple, "ViewTables"] = {}
+        self.cpu: dict[tuple, "ViewTables"] = {}
+
+    def fork(self) -> "AnalysisTables":
+        child = AnalysisTables()
+        child.mem = dict(self.mem)
+        child.cpu = dict(self.cpu)
+        return child
+
+    def adopt(self, other: "AnalysisTables") -> None:
+        self.mem = other.mem
+        self.cpu = other.cpu
+
+    def __len__(self) -> int:
+        return len(self.mem) + len(self.cpu)
+
+    def fingerprint(self) -> tuple:
+        """Hashable summary of the cache contents (for state-identity tests)."""
+        return (frozenset(self.mem), frozenset(self.cpu))
+
+
 class RtgpuIncremental:
     """Incremental per-task RTGPU analysis with (task, GN) view caching.
 
@@ -119,7 +161,12 @@ class RtgpuIncremental:
     over window splits).  See EXPERIMENTS.md §Perf for the effect.
     """
 
-    def __init__(self, taskset: TaskSet, tightened: bool = False):
+    def __init__(
+        self,
+        taskset: TaskSet,
+        tightened: bool = False,
+        tables: "AnalysisTables | None" = None,
+    ):
         self.taskset = taskset
         self.tightened = tightened
         n = len(taskset)
@@ -131,20 +178,21 @@ class RtgpuIncremental:
                 if taskset[i].n_mem:
                     b = max(b, max(taskset[i].mem_hi))
             self._blocking.append(b)
-        self._mem_tables: dict[tuple[int, int], ViewTables] = {}
-        self._cpu_tables: dict[tuple[int, int], ViewTables] = {}
+        # Views are keyed by the (frozen, hashable) task itself so an external
+        # AnalysisTables can be shared across task sets and priority orders.
+        self._tables = tables if tables is not None else AnalysisTables()
 
     def mem_tables(self, i: int, gn: int) -> ViewTables:
-        key = (i, gn)
-        if key not in self._mem_tables:
-            self._mem_tables[key] = ViewTables(mem_view(self.taskset[i], 2 * gn))
-        return self._mem_tables[key]
+        key = (self.taskset[i], gn)
+        if key not in self._tables.mem:
+            self._tables.mem[key] = ViewTables(mem_view(self.taskset[i], 2 * gn))
+        return self._tables.mem[key]
 
     def cpu_tables(self, i: int, gn: int) -> ViewTables:
-        key = (i, gn)
-        if key not in self._cpu_tables:
-            self._cpu_tables[key] = ViewTables(cpu_view(self.taskset[i], 2 * gn))
-        return self._cpu_tables[key]
+        key = (self.taskset[i], gn)
+        if key not in self._tables.cpu:
+            self._tables.cpu[key] = ViewTables(cpu_view(self.taskset[i], 2 * gn))
+        return self._tables.cpu[key]
 
     def analyze_task(self, k: int, alloc_prefix: Sequence[int]) -> TaskAnalysis:
         """Analyze task k given allocations for tasks 0..k (inclusive)."""

@@ -142,7 +142,7 @@ def suspension_oblivious_view(task: RTTask, n_vsm: int) -> ResourceView:
 
 
 class ViewTables:
-    """Vectorized evaluation of max_h W^h(t) for one view.
+    """Fast evaluation of max_h W^h(t) for one view.
 
     Precomputes, for every window start ``h`` and window position ``p``
     (absolute segment index ``j = h + p``), the execution length ``L[h, p]``
@@ -150,50 +150,83 @@ class ViewTables:
     suffice for any window ``t <= T``: the steady cycle advance is
     ``max(T, Σ exec + Σ gaps) >= T``, so at most the first cycle plus two
     more cycles can start inside the window.
+
+    Evaluation is a bisect over the per-``h`` prefix rows — K is tiny
+    (≤ the subtask count), so plain lists beat vectorization — plus an
+    exact-``t`` result cache: fixed-point iterations across candidate
+    allocations revisit the same windows constantly, and tables are shared
+    across analyses via :class:`repro.core.rta.AnalysisTables`, so the hit
+    rate in the online scheduler's admission loop is high.
     """
 
-    def __init__(self, view: ResourceView):
-        import numpy as np
+    _CACHE_LIMIT = 8192
 
+    def __init__(self, view: ResourceView):
         self.view = view
         k = view.k
         p = 3 * k + 2
-        hs = np.arange(k)[:, None]
-        ps = np.arange(p)[None, :]
-        j = hs + ps  # absolute segment index
-        exec_hi = np.asarray(view.exec_hi, dtype=np.float64)
-        gaps = np.asarray(view.gap_lo + (0.0,), dtype=np.float64)  # pos k-1 dummy
-        jk = j % k
-        s = gaps[jk]
-        s = np.where(jk == k - 1, view.steady_wrap, s)
-        s = np.where(j == k - 1, view.first_wrap, s)
-        self.length = exec_hi[jk]  # (K, P)
-        self.cum_ls = np.cumsum(self.length + s, axis=1)  # Σ_{q<=p} (L+S)
-        self.cum_l = np.cumsum(self.length, axis=1)
-        self._cycle_advance = max(view.period, float(np.sum(exec_hi)) + sum(view.gap_lo))
+        gaps = view.gap_lo + (0.0,)  # position k-1 gets a wrap term instead
+        self._rows: list[tuple[list[float], list[float], list[float]]] = []
+        min_horizon = _INF
+        for h in range(k):
+            length: list[float] = []
+            cum_ls: list[float] = []
+            cum_l: list[float] = []
+            acc_ls = acc_l = 0.0
+            for pos in range(p):
+                j = h + pos
+                jk = j % k
+                ln = view.exec_hi[jk]
+                if jk != k - 1:
+                    s = gaps[jk]
+                elif j == k - 1:
+                    s = view.first_wrap
+                else:
+                    s = view.steady_wrap
+                acc_ls += ln + s
+                acc_l += ln
+                length.append(ln)
+                cum_ls.append(acc_ls)
+                cum_l.append(acc_l)
+            self._rows.append((cum_ls, cum_l, length))
+            min_horizon = min(min_horizon, cum_ls[-1])
+        self._min_horizon = min_horizon
+        self._cache: dict[float, float] = {}
 
     def max_workload(self, t: float) -> float:
-        """max_h W^h(t) — vectorized over all window starts."""
-        import numpy as np
-
+        """max_h W^h(t) over all window starts (bisect per row, cached)."""
         if t <= 0.0:
             return 0.0
-        if t >= float(self.cum_ls[:, -1].min()):
+        cached = self._cache.get(t)
+        if cached is not None:
+            return cached
+        if t >= self._min_horizon:
             # Window reaches past some row's precomputed horizon (degenerate
             # zero-advance cycles, or t beyond ~2 periods — never hit by
             # constrained-deadline fixed points, which bail at t > D <= T).
-            return max(
+            out = max(
                 workload_fn(self.view, h, t) for h in range(self.view.k)
             )
-        mask = self.cum_ls <= t
-        nfull = mask.sum(axis=1)  # number of fully-counted segments per h
-        k, p = self.length.shape
-        idx = np.clip(nfull - 1, 0, p - 1)
-        full_work = np.where(nfull > 0, self.cum_l[np.arange(k), idx], 0.0)
-        consumed = np.where(nfull > 0, self.cum_ls[np.arange(k), idx], 0.0)
-        nxt = np.clip(nfull, 0, p - 1)
-        partial = np.minimum(self.length[np.arange(k), nxt], t - consumed)
-        return float(np.max(full_work + np.maximum(partial, 0.0)))
+        else:
+            import bisect
+
+            out = 0.0
+            for cum_ls, cum_l, length in self._rows:
+                nfull = bisect.bisect_right(cum_ls, t)
+                if nfull:
+                    consumed = cum_ls[nfull - 1]
+                    work = cum_l[nfull - 1]
+                else:
+                    consumed = work = 0.0
+                partial = min(length[nfull], t - consumed)
+                if partial > 0.0:
+                    work += partial
+                if work > out:
+                    out = work
+        if len(self._cache) >= self._CACHE_LIMIT:
+            self._cache.clear()
+        self._cache[t] = out
+        return out
 
 
 def tables(view: ResourceView) -> "ViewTables":

@@ -2,13 +2,17 @@
 
 task_spec.py   model-serving job -> RTGPU (CL, ML, G) task chain, with GPU
                parameters taken from the dry-run roofline artifact
-admission.py   Algorithm-2 admission control over mesh slices
-simulator.py   discrete-event federated executor (Figs. 12-13 analogue)
-executor.py    wall-clock best-effort executor for real small models (demo)
+admission.py   Algorithm-2 admission control over mesh slices (thin wrapper
+               over the online repro.sched.DynamicController)
+simulator.py   discrete-event federated executor (Figs. 12-13 analogue),
+               plus the churn-trace executor validating the online
+               scheduler's mode-change protocol
+executor.py    wall-clock best-effort executor for real small models (demo),
+               with live service join/leave and event-trace telemetry
 """
 from .admission import AdmissionController, AdmissionDecision
 from .executor import Service, WallClockExecutor
-from .simulator import SimResult, simulate
+from .simulator import ChurnSimResult, SimResult, simulate, simulate_churn
 from .task_spec import ServingTaskSpec, serving_task_to_rt
 
 __all__ = [
@@ -16,6 +20,8 @@ __all__ = [
     "AdmissionDecision",
     "SimResult",
     "simulate",
+    "ChurnSimResult",
+    "simulate_churn",
     "ServingTaskSpec",
     "serving_task_to_rt",
     "Service",

@@ -5,20 +5,24 @@ The controller owns ``gn_total`` accelerator slices (e.g. the 16-chip
 *dedicated* slice allocation (federated — no preemption needed) and the
 bus/CPU schedulability is re-verified on each admission with the full
 RTGPU analysis.  Rejected tasks leave the system state untouched.
+
+Since the online-scheduling subsystem landed this is a thin wrapper over
+:class:`repro.sched.DynamicController` in *instant*-transition mode: the
+front door admits before jobs exist, so allocation changes need no
+job-boundary staging.  The wrapper keeps the original one-shot API
+(``admit`` / ``remove`` / ``current_taskset``) while inheriting the warm
+paths — pinned 1-D admission search, hint + view-table reuse on the grid
+fallback — so repeated admissions are far cheaper than re-running
+Algorithm 2 cold (see ``benchmarks/churn_acceptance.py``).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Optional
 
-from repro.core import (
-    FederatedResult,
-    RTTask,
-    TaskSet,
-    analyze_rtgpu,
-    analyze_rtgpu_plus,
-    schedule,
-)
+from repro.core import FederatedResult, RTTask, TaskSet
+from repro.core.rta import RtgpuIncremental, SetAnalysis
+from repro.sched import DynamicController, EventTrace
 
 __all__ = ["AdmissionController", "AdmissionDecision"]
 
@@ -38,54 +42,68 @@ class AdmissionController:
         tightened: bool = True,
         mode: str = "greedy+grid",
         max_candidates: int = 2000,
+        trace: Optional[EventTrace] = None,
     ):
+        # ``mode`` is accepted for signature compatibility with the one-shot
+        # controller but IGNORED: the dynamic controller always runs its
+        # pinned warm path first and falls back to the hint-seeded grid DFS,
+        # which dominates every legacy mode in both coverage and latency.
         self.gn_total = gn_total
-        self.analyzer = analyze_rtgpu_plus if tightened else analyze_rtgpu
         self.mode = mode
-        self.max_candidates = max_candidates
-        self._tasks: list[RTTask] = []
-        self._alloc: dict[str, int] = {}
+        self._tightened = tightened
+        self._dyn = DynamicController(
+            gn_total,
+            tightened=tightened,
+            transition="instant",
+            allow_realloc=True,
+            max_candidates=max_candidates,
+            trace=trace,
+        )
+
+    @property
+    def dynamic(self) -> DynamicController:
+        """The underlying online controller (admission epochs, bounds)."""
+        return self._dyn
 
     @property
     def tasks(self) -> tuple[RTTask, ...]:
-        return tuple(self._tasks)
+        ts = self._dyn.current_taskset()
+        return tuple(ts.tasks) if ts else ()
 
     @property
     def allocation(self) -> dict:
-        return dict(self._alloc)
+        return self._dyn.allocation
 
     def admit(self, task: RTTask) -> AdmissionDecision:
-        candidate = TaskSet.deadline_monotonic(self._tasks + [task])
-        res = schedule(
-            candidate,
-            self.gn_total,
-            analyzer=self.analyzer,
-            mode=self.mode,
-            max_candidates=self.max_candidates,
-        )
-        if not res.schedulable:
+        dec = self._dyn.admit(task)
+        if not dec.admitted:
             return AdmissionDecision(
                 False, None,
-                reason="schedulability test failed under every allocation",
-                result=res,
+                reason=dec.reason or
+                "schedulability test failed under every allocation",
             )
-        self._tasks = list(candidate.tasks)
-        self._alloc = {
-            t.name: g for t, g in zip(candidate.tasks, res.alloc)
-        }
-        return AdmissionDecision(True, dict(self._alloc), result=res)
+        alloc = self._dyn.allocation
+        ts = self._dyn.current_taskset()
+        alloc_list = tuple(alloc[t.name] for t in ts)
+        # re-attach the per-task SetAnalysis the one-shot controller used to
+        # expose on successful decisions; sharing the dynamic controller's
+        # view tables makes this O(n) fixed points, not a cold re-analysis
+        inc = RtgpuIncremental(
+            ts, tightened=self._tightened, tables=self._dyn.tables
+        )
+        analysis = SetAnalysis(tuple(
+            inc.analyze_task(k, alloc_list) for k in range(len(ts))
+        ))
+        result = FederatedResult(True, alloc_list, analysis, dec.tried)
+        return AdmissionDecision(True, alloc, result=result)
 
     def remove(self, name: str) -> bool:
-        before = len(self._tasks)
-        self._tasks = [t for t in self._tasks if t.name != name]
-        self._alloc.pop(name, None)
-        return len(self._tasks) < before
+        return self._dyn.release(name)
 
     def current_taskset(self) -> Optional[TaskSet]:
-        if not self._tasks:
-            return None
-        return TaskSet.deadline_monotonic(self._tasks)
+        return self._dyn.current_taskset()
 
     def current_alloc_list(self) -> list[int]:
         ts = self.current_taskset()
-        return [self._alloc[t.name] for t in ts] if ts else []
+        alloc = self._dyn.allocation
+        return [alloc[t.name] for t in ts] if ts else []

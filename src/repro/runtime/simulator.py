@@ -12,19 +12,31 @@ This is the container-side stand-in for the paper's real-GPU experiment
 with per-job segment durations sampled from [lo, hi] (worst-case model:
 lo == hi).  Observed response times validate the analysis bounds:
 tests assert  observed R ≤ analytic R̂  for admitted sets.
+
+Two entry points:
+  * :func:`simulate` — fixed task set over a horizon (the seed behavior);
+  * :func:`simulate_churn` — dynamic membership: an admit/release event
+    trace is fed through a :class:`repro.sched.DynamicController`, slices
+    are reclaimed only at job boundaries (mode-change protocol), and every
+    completed job is checked against the analytic bound certified by the
+    admission epoch it was released in.
+
+Both record into an optional :class:`repro.sched.EventTrace` (releases,
+CPU preemptions, completions, deadline misses) for Chrome-trace export.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
 import math
-from typing import Optional
+from typing import Optional, Sequence
 
 import numpy as np
 
-from repro.core import RTTask, SegmentKind, TaskSet
+from repro.core import ChurnEvent, RTTask, SegmentKind, TaskSet
+from repro.sched import DynamicController, EventTrace
 
-__all__ = ["SimResult", "simulate"]
+__all__ = ["SimResult", "simulate", "ChurnSimResult", "simulate_churn"]
 
 _EPS = 1e-9
 
@@ -82,6 +94,7 @@ def simulate(
     seed: int = 0,
     release_jitter: bool = True,
     worst_case: bool = False,
+    trace: Optional[EventTrace] = None,
 ) -> SimResult:
     """Run the federated RT executor for ``horizon`` time units.
 
@@ -90,6 +103,7 @@ def simulate(
     n = len(taskset)
     rng = np.random.default_rng(seed)
     chains = [t.chain() for t in taskset]
+    names = [t.name or f"task{i}" for i, t in enumerate(taskset)]
 
     releases: list[float] = []
     for i, t in enumerate(taskset):
@@ -102,6 +116,7 @@ def simulate(
 
     now = 0.0
     bus_running: Optional[int] = None  # task id holding the bus (non-preempt)
+    last_cpu_owner: Optional[int] = None
 
     def seg_kind(i: int) -> Optional[SegmentKind]:
         j = jobs[i]
@@ -121,11 +136,24 @@ def simulate(
                 )
                 j.remaining = j.durations[0]
                 jobs[i] = j
+                if trace is not None:
+                    trace.record(now, "release", names[i],
+                                 deadline=j.deadline_abs)
 
         # pick CPU owner: highest-priority ready CPU segment (preemptive)
         cpu_owner = next(
             (i for i in range(n) if seg_kind(i) is SegmentKind.CPU), None
         )
+        if (
+            trace is not None
+            and last_cpu_owner is not None
+            and cpu_owner != last_cpu_owner
+            and seg_kind(last_cpu_owner) is SegmentKind.CPU
+            and jobs[last_cpu_owner].remaining > _EPS
+        ):
+            trace.record(now, "preempt", names[last_cpu_owner],
+                         by=names[cpu_owner] if cpu_owner is not None else "")
+        last_cpu_owner = cpu_owner
         # bus owner: keep non-preemptive holder; else highest-priority waiter
         if bus_running is not None and seg_kind(bus_running) is not SegmentKind.MEM:
             bus_running = None
@@ -172,8 +200,16 @@ def simulate(
                     resp = now - j.release
                     responses[i].append(resp)
                     completed[i] += 1
+                    if trace is not None:
+                        trace.record(now, "complete", names[i],
+                                     response=resp)
                     if resp > taskset[i].deadline + 1e-6:
                         misses[i] += 1
+                        if trace is not None:
+                            trace.record(
+                                now, "miss", names[i],
+                                overshoot=resp - taskset[i].deadline,
+                            )
                     # next sporadic release
                     gap = 0.0
                     if release_jitter:
@@ -185,3 +221,269 @@ def simulate(
                 else:
                     j.remaining = j.durations[j.seg_idx]
     return SimResult(responses=responses, misses=misses, jobs=completed)
+
+
+# ---- dynamic-membership executor (online scheduler validation) --------------
+
+
+@dataclasses.dataclass
+class ChurnSimResult:
+    """Per-service outcome of a churn-trace run.
+
+    ``responses[name][k]`` and ``bounds[name][k]`` pair each completed
+    job's observed response with the analytic R̂ certified by the admission
+    epoch the job was released in — the validation invariant is
+    ``observed ≤ bound`` for every job, in every epoch, across the trace."""
+
+    responses: dict[str, list[float]]
+    bounds: dict[str, list[float]]
+    misses: dict[str, int]
+    jobs: dict[str, int]
+    admitted: list[str]
+    rejected: list[str]
+
+    @property
+    def any_miss(self) -> bool:
+        return any(m > 0 for m in self.misses.values())
+
+    def bound_violations(self, eps: float = 1e-6) -> list[str]:
+        out = []
+        for name, rs in self.responses.items():
+            for r, b in zip(rs, self.bounds[name]):
+                if r > b + eps:
+                    out.append(f"{name}: observed {r:.3f} > bound {b:.3f}")
+        return out
+
+    @property
+    def total_jobs(self) -> int:
+        return sum(self.jobs.values())
+
+
+@dataclasses.dataclass
+class _ChurnJob:
+    name: str
+    release: float
+    deadline_abs: float
+    chain: list
+    durations: list
+    bound: float                  # analytic R̂ at release epoch
+    seg_idx: int = 0
+    remaining: float = 0.0
+
+
+def simulate_churn(
+    events: Sequence[ChurnEvent],
+    gn_total: int,
+    horizon: float,
+    seed: int = 0,
+    release_jitter: bool = True,
+    worst_case: bool = False,
+    tightened: bool = True,
+    allow_realloc: bool = True,
+    controller: Optional[DynamicController] = None,
+    trace: Optional[EventTrace] = None,
+) -> ChurnSimResult:
+    """Execute an admit/release churn trace under the online scheduler.
+
+    Every ``admit`` event goes through the controller's transitional
+    analysis; rejected services never run.  A ``release`` event marks the
+    service departing — its job in flight finishes and only then does
+    :meth:`DynamicController.job_boundary` reclaim the slices (the
+    mode-change protocol).  Each job samples durations with the task
+    parameters and slice count *committed at its release*, and is checked
+    against the analytic bound of that epoch."""
+    if controller is None:
+        controller = DynamicController(
+            gn_total,
+            tightened=tightened,
+            transition="boundary",
+            allow_realloc=allow_realloc,
+            trace=trace,
+        )
+    if controller.transition != "boundary":
+        # an instant controller reclaims mid-job, leaving the sim's active
+        # map pointing at entries the controller no longer knows
+        raise ValueError(
+            "simulate_churn requires a boundary-transition controller "
+            f"(got transition={controller.transition!r})"
+        )
+    rng = np.random.default_rng(seed)
+    pending = sorted(events, key=lambda e: (e.time, e.name))
+    ev_idx = 0
+
+    active: dict[str, Optional[_ChurnJob]] = {}   # resident -> job in flight
+    next_release: dict[str, float] = {}
+    responses: dict[str, list[float]] = {}
+    bounds: dict[str, list[float]] = {}
+    misses: dict[str, int] = {}
+    jobs_done: dict[str, int] = {}
+    admitted: list[str] = []
+    rejected: list[str] = []
+
+    now = 0.0
+    bus_running: Optional[str] = None
+    last_cpu_owner: Optional[str] = None
+
+    def seg_kind(name: str) -> Optional[SegmentKind]:
+        j = active.get(name)
+        if j is None:
+            return None
+        return j.chain[j.seg_idx][0]
+
+    def finish_boundary(name: str) -> None:
+        """Job boundary for ``name``: reclaim if departing, else commit
+        staged mode changes; drop reclaimed services from the active map."""
+        if controller.job_boundary(name, t=now) == "reclaimed":
+            active.pop(name, None)
+            next_release.pop(name, None)
+
+    while now < horizon - _EPS:
+        # 1. churn events due now
+        while ev_idx < len(pending) and pending[ev_idx].time <= now + _EPS:
+            ev = pending[ev_idx]
+            ev_idx += 1
+            if ev.kind == "admit":
+                dec = controller.admit(ev.task, t=now)
+                if dec.admitted:
+                    admitted.append(ev.name)
+                    active[ev.name] = None
+                    next_release[ev.name] = now
+                    # setdefault: a re-admission of a departed name must
+                    # extend its history, not erase the first residency
+                    responses.setdefault(ev.name, [])
+                    bounds.setdefault(ev.name, [])
+                    misses.setdefault(ev.name, 0)
+                    jobs_done.setdefault(ev.name, 0)
+                    # a job spanning the reconfiguration sees the arrival's
+                    # interference: lift its bound to the new epoch's R̂
+                    # (certified over the transitional set, so valid for
+                    # jobs of either epoch)
+                    for n2, j2 in active.items():
+                        if j2 is not None:
+                            j2.bound = max(j2.bound, controller.bound(n2))
+                else:
+                    rejected.append(ev.name)
+            elif ev.kind == "release":
+                if controller.release(ev.name, t=now) and active.get(ev.name) is None:
+                    finish_boundary(ev.name)   # idle: reclaim immediately
+            else:
+                raise ValueError(f"unknown churn event kind {ev.kind!r}")
+
+        # 2. job releases (departing services release no new jobs)
+        for name in list(active):
+            if (
+                active[name] is None
+                and not controller.is_departing(name)
+                and next_release[name] <= now + _EPS
+            ):
+                task = controller.task(name)
+                vsm = 2 * controller.allocation[name]
+                j = _ChurnJob(
+                    name=name,
+                    release=next_release[name],
+                    deadline_abs=next_release[name] + task.deadline,
+                    chain=task.chain(),
+                    durations=_sample_durations(task, vsm, rng, worst_case),
+                    bound=controller.bound(name),
+                )
+                j.remaining = j.durations[0]
+                active[name] = j
+                if trace is not None:
+                    trace.record(now, "release", name, deadline=j.deadline_abs)
+
+        # 3. arbitration under the controller's current priority order
+        prio = {n: i for i, n in enumerate(controller.order())}
+        ready_cpu = sorted(
+            (n for n in active if seg_kind(n) is SegmentKind.CPU),
+            key=lambda n: prio.get(n, len(prio)),
+        )
+        cpu_owner = ready_cpu[0] if ready_cpu else None
+        if (
+            trace is not None
+            and last_cpu_owner is not None
+            and cpu_owner != last_cpu_owner
+            and seg_kind(last_cpu_owner) is SegmentKind.CPU
+            and active[last_cpu_owner].remaining > _EPS
+        ):
+            trace.record(now, "preempt", last_cpu_owner, by=cpu_owner or "")
+        last_cpu_owner = cpu_owner
+
+        if bus_running is not None and seg_kind(bus_running) is not SegmentKind.MEM:
+            bus_running = None
+        if bus_running is None:
+            ready_mem = sorted(
+                (n for n in active if seg_kind(n) is SegmentKind.MEM),
+                key=lambda n: prio.get(n, len(prio)),
+            )
+            bus_running = ready_mem[0] if ready_mem else None
+
+        running = set()
+        if cpu_owner is not None:
+            running.add(cpu_owner)
+        if bus_running is not None:
+            running.add(bus_running)
+        for name in active:
+            if seg_kind(name) is SegmentKind.GPU:
+                running.add(name)
+
+        # 4. next event time: completion, release, churn event, or horizon
+        dt = math.inf
+        for name in running:
+            dt = min(dt, active[name].remaining)
+        for name in active:
+            if active[name] is None and not controller.is_departing(name):
+                dt = min(dt, next_release[name] - now)
+        if ev_idx < len(pending):
+            dt = min(dt, pending[ev_idx].time - now)
+        if not math.isfinite(dt):
+            break
+        dt = max(dt, 0.0)
+        step_end = min(now + dt, horizon)
+        dt = step_end - now
+
+        for name in running:
+            active[name].remaining -= dt
+        now = step_end
+
+        # 5. completions
+        for name in list(running):
+            j = active.get(name)
+            if j is None or j.remaining > _EPS:
+                continue
+            if j.chain[j.seg_idx][0] is SegmentKind.MEM and bus_running == name:
+                bus_running = None
+            j.seg_idx += 1
+            if j.seg_idx < len(j.chain):
+                j.remaining = j.durations[j.seg_idx]
+                continue
+            # job done
+            resp = now - j.release
+            responses[name].append(resp)
+            bounds[name].append(j.bound)
+            jobs_done[name] += 1
+            deadline = j.deadline_abs - j.release
+            if trace is not None:
+                trace.record(now, "complete", name, response=resp,
+                             bound=j.bound)
+            if resp > deadline + 1e-6:
+                misses[name] += 1
+                if trace is not None:
+                    trace.record(now, "miss", name,
+                                 overshoot=resp - deadline)
+            active[name] = None
+            finish_boundary(name)          # reclaim / commit staged changes
+            if name in active:             # still resident: next sporadic gap
+                task = controller.task(name)
+                gap = 0.0
+                if release_jitter:
+                    gap = float(rng.uniform(0, 0.2 * task.period))
+                next_release[name] = max(j.release + task.period + gap, now)
+
+    return ChurnSimResult(
+        responses=responses,
+        bounds=bounds,
+        misses=misses,
+        jobs=jobs_done,
+        admitted=admitted,
+        rejected=rejected,
+    )

@@ -1,0 +1,22 @@
+"""Online scheduling subsystem: dynamic admission, mode changes, telemetry.
+
+controller.py   DynamicController — admit / release / update_rate with the
+                job-boundary mode-change protocol and warm-started
+                incremental re-allocation over Algorithm 2
+trace.py        EventTrace — scheduler event telemetry with Chrome
+                trace-event JSON export (chrome://tracing / Perfetto)
+
+The static front door (:class:`repro.runtime.AdmissionController`) is a
+thin wrapper over :class:`DynamicController` in instant-transition mode;
+the discrete-event simulator (:func:`repro.runtime.simulate_churn`)
+validates the online guarantees over whole churn traces.
+"""
+from .controller import DynamicController, SchedDecision
+from .trace import EventTrace, TraceEvent
+
+__all__ = [
+    "DynamicController",
+    "SchedDecision",
+    "EventTrace",
+    "TraceEvent",
+]

@@ -1,0 +1,592 @@
+"""Online admission / mode-change controller for RTGPU federated scheduling.
+
+The one-shot pipeline (Algorithm 2 → admit → run) assumed a frozen task
+set.  A serving cluster churns: model services arrive, depart, and change
+their request rate while admitted tasks keep hard deadlines.  This module
+turns the static machinery into an online scheduler built around two rules:
+
+**Mode-change protocol.**  Reconfiguration never touches a job in flight:
+
+  * a departing task keeps its virtual-SM slices until its current job's
+    *boundary* (:meth:`DynamicController.job_boundary`); only then is its
+    capacity reclaimed and handed to arrivals;
+  * a rate change is *staged* and committed at the task's next job
+    boundary — until every stager commits, the system is in a
+    *transitional* mode spanning the old and new configurations.
+    (Allocation re-balancing commits instantly and is therefore only
+    offered by instant-transition front doors; staged boundary-mode
+    re-allocation is a ROADMAP item — the ``staged_alloc`` envelope
+    plumbing below is ready for it but currently never populated;)
+  * an arrival is admitted only if the **transitional set** — active tasks,
+    not-yet-reclaimed departers, stagers at their envelope of old/new
+    parameters, plus the newcomer — passes the full RTGPU analysis, so no
+    admitted task can miss a deadline *during* reconfiguration.
+
+  Transitional certification analyzes every task at the envelope worst
+  case: its own GPU segments at ``min(old GN, new GN)`` virtual SMs (fewer
+  lanes → slower), interference from higher-priority tasks at
+  ``max(old GN, new GN)`` (more lanes → denser bus/CPU bursts), rate
+  stagers at ``min(T)``/``min(D)``, and additionally at both pure vectors
+  (all-old, all-new), taking the max response over the variants.
+
+**Warm-start incremental re-allocation.**  Admission first tries the
+*pinned* path — every resident task keeps its slices and only the arrival's
+GN is searched — which costs O(free capacity) incremental analyses instead
+of a full grid search.  Only if that fails (and ``allow_realloc``) does it
+fall back to :func:`repro.core.federated.grid_search_dfs`, warm-started
+with the previous allocation as a ``hint`` and the persistent
+:class:`~repro.core.rta.AnalysisTables` view cache, so unchanged
+(task, GN) workload staircases are never rebuilt.  ``benchmarks/
+churn_acceptance.py`` measures the speedup versus the cold grid search.
+
+All mutating operations are transactional: the view cache is forked, and
+only a *successful* decision adopts the fork — a rejected ``admit()``
+leaves the controller state (allocation map, bounds, analysis cache)
+byte-identical, which ``tests/test_sched.py`` asserts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+from repro.core import (
+    AnalysisTables,
+    RTTask,
+    TaskSet,
+)
+from repro.core.federated import grid_search_dfs
+from repro.core.rta import RtgpuIncremental
+
+from .trace import EventTrace
+
+__all__ = ["SchedDecision", "DynamicController"]
+
+_EPS = 1e-9
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedDecision:
+    """Outcome of one controller operation (admit / update_rate)."""
+
+    admitted: bool
+    alloc: Optional[dict[str, int]]          # target GN per task (post-commit)
+    bounds: Optional[dict[str, float]]       # certified R̂ per task
+    reason: str = ""
+    path: str = ""                           # "pinned" | "realloc" | "update"
+    tried: int = 0                           # candidate vectors analyzed
+
+
+@dataclasses.dataclass
+class _Entry:
+    """One resident task: committed state plus staged mode-change state.
+
+    ``staged_task`` is set by rate changes in boundary mode.
+    ``staged_alloc`` is reserved for staged boundary-mode re-allocation
+    (ROADMAP); nothing populates it yet, so ``gn_lo == gn_hi`` today."""
+
+    task: RTTask                        # committed parameters (jobs in flight)
+    alloc: int                          # committed GN (slices physically held)
+    staged_task: Optional[RTTask] = None
+    staged_alloc: Optional[int] = None
+    departing: bool = False
+
+    @property
+    def target_task(self) -> RTTask:
+        return self.staged_task if self.staged_task is not None else self.task
+
+    @property
+    def target_alloc(self) -> int:
+        return self.staged_alloc if self.staged_alloc is not None else self.alloc
+
+    @property
+    def trans_task(self) -> RTTask:
+        """Envelope task for transitional analysis: min(T), min(D).
+
+        Sound for any mix of old- and new-parameter jobs: min T upper-bounds
+        the task's interference on others, min D lower-bounds the deadline
+        its own response is checked against.  (min D ≤ min T always holds
+        when both configurations are individually constrained-deadline.)
+        """
+        if self.staged_task is None:
+            return self.task
+        return dataclasses.replace(
+            self.task,
+            period=min(self.task.period, self.staged_task.period),
+            deadline=min(self.task.deadline, self.staged_task.deadline),
+        )
+
+    @property
+    def gn_lo(self) -> int:
+        return min(self.alloc, self.target_alloc)
+
+    @property
+    def gn_hi(self) -> int:
+        return max(self.alloc, self.target_alloc)
+
+    @property
+    def in_transition(self) -> bool:
+        return self.staged_task is not None or self.staged_alloc is not None
+
+    def copy(self) -> "_Entry":
+        return dataclasses.replace(self)
+
+
+class DynamicController:
+    """Online admission + mode-change control over ``gn_total`` SM slices.
+
+    ``transition="boundary"`` (default) enforces the job-boundary protocol
+    above; the runtime must call :meth:`job_boundary` when a task's job
+    completes.  ``transition="instant"`` commits every change immediately —
+    the correct semantics for *pre-runtime* admission where no job is in
+    flight (the static :class:`repro.runtime.AdmissionController` wraps
+    this mode).
+    """
+
+    def __init__(
+        self,
+        gn_total: int,
+        tightened: bool = True,
+        transition: str = "boundary",
+        allow_realloc: bool = True,
+        max_candidates: int = 2000,
+        trace: Optional[EventTrace] = None,
+    ):
+        if transition not in ("boundary", "instant"):
+            raise ValueError(f"unknown transition mode {transition!r}")
+        self.gn_total = gn_total
+        self.tightened = tightened
+        self.transition = transition
+        self.allow_realloc = allow_realloc
+        self.max_candidates = max_candidates
+        self.trace = trace
+        self._entries: dict[str, _Entry] = {}
+        self._bounds: dict[str, float] = {}
+        self._tables = AnalysisTables()
+        # Memoized per-task certification: key = the complete interference
+        # context of one analyze_task call — (prefix (task, GN) pairs, own
+        # (task, GN), bus blocking from below) — value = R̂ (inf when
+        # unschedulable).  Task k's analysis depends on nothing else, so a
+        # pinned admission re-analyzes only tasks at or below the arrival's
+        # priority; the untouched higher-priority prefix is a pure lookup.
+        self._memo: dict[tuple, float] = {}
+        self.epoch = 0
+
+    # Caches are keyed by departed tasks forever if left unbounded; a
+    # long-lived controller would leak and pay O(history) dict copies per
+    # admission.  Crude generational eviction keeps both transactional
+    # copies and memory O(limit); a cleared cache only costs re-analysis.
+    _MEMO_LIMIT = 20_000
+    _TABLES_LIMIT = 4_000
+
+    def _trim_caches(self) -> None:
+        if len(self._memo) > self._MEMO_LIMIT:
+            self._memo.clear()
+        if len(self._tables) > self._TABLES_LIMIT:
+            self._tables.adopt(AnalysisTables())
+
+    # ---- introspection ------------------------------------------------------
+
+    @property
+    def allocation(self) -> dict[str, int]:
+        """Committed GN per resident task (slices physically held now)."""
+        return {n: e.alloc for n, e in self._entries.items()}
+
+    @property
+    def target_allocation(self) -> dict[str, int]:
+        """GN per task once every staged change commits."""
+        return {n: e.target_alloc for n, e in self._entries.items()}
+
+    @property
+    def capacity_in_use(self) -> int:
+        """Envelope capacity: committed and staged slices both count until
+        the transition commits (the protocol's safety invariant)."""
+        return sum(e.gn_hi for e in self._entries.values())
+
+    @property
+    def free_capacity(self) -> int:
+        return self.gn_total - self.capacity_in_use
+
+    @property
+    def tables(self) -> AnalysisTables:
+        """The shared (task, GN) → workload-table cache; external analyses
+        over the resident set can pass this to RtgpuIncremental to stay
+        warm."""
+        return self._tables
+
+    def bounds(self) -> dict[str, float]:
+        """Certified analytic R̂ per resident task (transitional envelope)."""
+        return dict(self._bounds)
+
+    def bound(self, name: str) -> float:
+        return self._bounds.get(name, math.inf)
+
+    def order(self) -> list[str]:
+        """Current fixed-priority order (deadline-monotonic over the
+        transitional set; index 0 = highest priority)."""
+        ordered = sorted(
+            self._entries.values(), key=lambda e: e.trans_task.deadline
+        )
+        return [e.task.name for e in ordered]
+
+    def is_departing(self, name: str) -> bool:
+        e = self._entries.get(name)
+        return bool(e and e.departing)
+
+    def task(self, name: str) -> Optional[RTTask]:
+        e = self._entries.get(name)
+        return e.task if e else None
+
+    def current_taskset(self) -> Optional[TaskSet]:
+        if not self._entries:
+            return None
+        return TaskSet.deadline_monotonic(
+            [e.task for e in self._entries.values()]
+        )
+
+    def fingerprint(self) -> tuple:
+        """Hashable snapshot of ALL mutable controller state — allocation
+        map, staged changes, bounds, departures, analysis cache, epoch."""
+        return (
+            tuple(sorted(
+                (n, e.alloc, e.target_alloc, e.departing, e.task, e.target_task)
+                for n, e in self._entries.items()
+            )),
+            tuple(sorted(self._bounds.items())),
+            self._tables.fingerprint(),
+            frozenset(self._memo),
+            self.epoch,
+        )
+
+    # ---- transitional certification ----------------------------------------
+
+    def _certify(
+        self,
+        entries: Sequence[_Entry],
+        tables: AnalysisTables,
+        memo: dict[tuple, float],
+        probe: Optional[str] = None,
+    ) -> tuple[Optional[dict[str, float]], int, str]:
+        """Full RTGPU analysis of the transitional set.
+
+        Returns ``(bounds, analyses, reason)``; ``bounds`` is None when some
+        task fails.  When any entry is mid-transition the set is analyzed at
+        three vectors — all-committed, all-target, and the mixed envelope
+        (hp interference at gn_hi, own GPU at gn_lo) — and each task's
+        certified bound is the max over the variants, so jobs of either
+        epoch and jobs spanning the switch are all covered.
+
+        Per-task results are memoized on the complete interference context,
+        so successive certifications (e.g. the pinned admission loop, or
+        re-certifying after churn elsewhere in the set) only pay for tasks
+        whose context actually changed.
+        """
+        ordered = sorted(entries, key=lambda e: e.trans_task.deadline)
+        ts = TaskSet(tuple(e.trans_task for e in ordered))
+        inc = RtgpuIncremental(ts, tightened=self.tightened, tables=tables)
+        staging = any(e.in_transition for e in ordered)
+        vectors: list[tuple[list[int], list[int]]] = [
+            ([e.gn_hi for e in ordered], [e.gn_lo for e in ordered]),
+        ]
+        if staging:
+            vectors.append(([e.alloc for e in ordered],) * 2)
+            vectors.append(([e.target_alloc for e in ordered],) * 2)
+        # bus blocking below k (part of the memo key — analyze_task uses it)
+        n = len(ordered)
+        blocking = [0.0] * n
+        acc = 0.0
+        for k in range(n - 1, -1, -1):
+            blocking[k] = acc
+            t = ordered[k].trans_task
+            if t.n_mem:
+                acc = max(acc, max(t.mem_hi))
+        bounds: dict[str, float] = {}
+        analyses = 0
+        # analyze the probe (usually the arrival — the marginal task) first:
+        # a failing candidate then costs one analysis, not a prefix sweep
+        indices = list(range(n))
+        if probe is not None:
+            for k in indices:
+                if ordered[k].task.name == probe:
+                    indices.remove(k)
+                    indices.insert(0, k)
+                    break
+        for k in indices:
+            e = ordered[k]
+            worst = 0.0
+            for interf_vec, self_vec in vectors:
+                key = (
+                    tuple(
+                        (ordered[i].trans_task, interf_vec[i]) for i in range(k)
+                    ),
+                    (e.trans_task, self_vec[k]),
+                    blocking[k],
+                )
+                r = memo.get(key)
+                if r is None:
+                    prefix = interf_vec[:k] + [self_vec[k]]
+                    ta = inc.analyze_task(k, prefix)
+                    analyses += 1
+                    r = ta.response if ta.schedulable else math.inf
+                    memo[key] = r
+                if not math.isfinite(r):
+                    return None, analyses, f"task {e.task.name!r} unschedulable"
+                worst = max(worst, r)
+            bounds[e.task.name] = worst
+        return bounds, analyses, ""
+
+    # ---- operations ---------------------------------------------------------
+
+    def admit(self, task: RTTask, t: float = 0.0) -> SchedDecision:
+        """Admit ``task`` against the transitional set, or reject untouched.
+
+        Pinned warm path first (residents keep their slices; only the
+        arrival's GN is searched over reclaimed-free capacity), then the
+        warm-started full grid search if ``allow_realloc``.
+        """
+        name = task.name
+        if not name:
+            return self._reject(task, t, "task must have a name")
+        if name in self._entries:
+            return self._reject(task, t, f"name {name!r} already resident")
+
+        free = self.free_capacity
+        g_min = None
+        for g in range(1, free + 1):
+            if task.min_span(2 * g) <= task.deadline + _EPS:
+                g_min = g
+                break
+        tried = 0
+        fork = self._tables.fork()
+        memo = dict(self._memo)
+        residents = [e.copy() for e in self._entries.values()]
+
+        if g_min is not None:
+            # pinned path: 1-D search over the arrival's GN only
+            for g in range(g_min, free + 1):
+                cand = _Entry(task=task, alloc=g)
+                tried += 1
+                bounds, _, _ = self._certify(residents + [cand], fork, memo,
+                                             probe=name)
+                if bounds is not None:
+                    return self._commit_admit(cand, bounds, fork, memo, t,
+                                              path="pinned", tried=tried)
+
+        # Full re-allocation only helps the *instant* front door: under the
+        # boundary protocol a shrinking resident keeps max(old, new) slices
+        # until its job boundary, so re-allocating can never hand an arrival
+        # capacity the pinned path didn't already have.
+        realloc_ran = False
+        if self.allow_realloc and self.transition == "instant":
+            dec, dfs_tried = self._admit_realloc(
+                task, residents, fork, memo, t, tried
+            )
+            if dec is not None:
+                return dec
+            tried += dfs_tried
+            realloc_ran = True
+
+        if realloc_ran:
+            reason = (
+                "unschedulable under pinned and re-balanced allocations"
+                + (" (search truncated)" if tried >= self.max_candidates
+                   else "")
+            )
+        elif g_min is None:
+            reason = "no feasible GN within free capacity"
+        else:
+            reason = "transitional set unschedulable under every candidate allocation"
+        return self._reject(task, t, reason, tried=tried)
+
+    def _admit_realloc(
+        self,
+        task: RTTask,
+        residents: list[_Entry],
+        fork: AnalysisTables,
+        memo: dict[tuple, float],
+        t: float,
+        tried0: int,
+    ) -> tuple[Optional[SchedDecision], int]:
+        """Warm-started full re-allocation (grid DFS with hint + tables).
+
+        Instant mode only: with no jobs in flight the whole allocation may
+        be re-balanced at once.  The DFS is seeded with the incumbent
+        allocation as its ``hint`` and shares the persistent view tables, so
+        a near-unchanged task set revalidates in O(n) analyses instead of
+        re-running Algorithm 2 from scratch.
+
+        Returns ``(decision, dfs_nodes_tried)``; the node count is reported
+        even on failure so callers can tell a truncated search from an
+        exhausted one."""
+        cand_entry = _Entry(task=task, alloc=0)
+        ordered = sorted(
+            residents + [cand_entry], key=lambda e: e.trans_task.deadline
+        )
+        ts = TaskSet(tuple(e.trans_task for e in ordered))
+        hint = [
+            e.gn_hi if e is not cand_entry else None for e in ordered
+        ]
+        fed = grid_search_dfs(
+            ts, self.gn_total, tightened=self.tightened,
+            max_nodes=self.max_candidates, hint=hint, tables=fork,
+        )
+        if not fed.schedulable:
+            return None, fed.candidates_tried
+        new_gn = {e.task.name: g for e, g in zip(ordered, fed.alloc)}
+        for e in residents:
+            e.alloc = new_gn[e.task.name]
+            e.staged_alloc = None
+        cand_entry.alloc = new_gn[task.name]
+        bounds = {ta.name: ta.response for ta in fed.analysis.tasks}
+        return self._commit_admit(
+            cand_entry, bounds, fork, memo, t, path="realloc",
+            tried=tried0 + fed.candidates_tried, residents=residents,
+        ), fed.candidates_tried
+
+    def _commit_admit(
+        self,
+        cand: _Entry,
+        bounds: dict[str, float],
+        fork: AnalysisTables,
+        memo: dict[tuple, float],
+        t: float,
+        path: str,
+        tried: int,
+        residents: Optional[list[_Entry]] = None,
+    ) -> SchedDecision:
+        if residents is not None:
+            for e in residents:
+                self._entries[e.task.name] = e
+        self._entries[cand.task.name] = cand
+        self._bounds = bounds
+        self._tables.adopt(fork)
+        self._memo = memo
+        self._trim_caches()
+        self.epoch += 1
+        if self.trace is not None:
+            self.trace.record(
+                t, "admit", cand.task.name, gn=cand.alloc, path=path,
+                bound=round(bounds[cand.task.name], 6),
+            )
+            if path == "realloc":
+                self.trace.record(t, "realloc", cand.task.name,
+                                  target={k: v for k, v in
+                                          self.target_allocation.items()})
+        return SchedDecision(
+            admitted=True,
+            alloc=self.target_allocation,
+            bounds=dict(bounds),
+            path=path,
+            tried=tried,
+        )
+
+    def _reject(
+        self, task: RTTask, t: float, reason: str, tried: int = 0
+    ) -> SchedDecision:
+        if self.trace is not None:
+            self.trace.record(t, "reject", task.name or "?", reason=reason)
+        return SchedDecision(False, None, None, reason=reason, tried=tried)
+
+    def release(self, name: str, t: float = 0.0) -> bool:
+        """Begin removing ``name``.  Boundary mode marks it *departing* —
+        its slices stay allocated (and it stays in every transitional
+        analysis) until :meth:`job_boundary` reclaims them.  Instant mode
+        reclaims immediately.  Removal never needs a schedulability test."""
+        e = self._entries.get(name)
+        if e is None or e.departing:
+            return False
+        if self.transition == "instant":
+            self._reclaim(name, t)
+            return True
+        e.departing = True
+        if self.trace is not None:
+            self.trace.record(t, "depart", name, gn=e.alloc)
+        return True
+
+    def _reclaim(self, name: str, t: float) -> None:
+        e = self._entries.pop(name)
+        self._bounds.pop(name, None)
+        self.epoch += 1
+        if self.trace is not None:
+            self.trace.record(t, "reclaim", name, gn=e.alloc)
+
+    def job_boundary(self, name: str, t: float = 0.0) -> str:
+        """Runtime hook: ``name`` just completed a job (or is idle).
+
+        Returns ``"reclaimed"`` (departing task fully removed, slices back
+        in the pool), ``"committed"`` (staged allocation / rate change took
+        effect), or ``"none"``."""
+        e = self._entries.get(name)
+        if e is None:
+            return "none"
+        if e.departing:
+            self._reclaim(name, t)
+            return "reclaimed"
+        if e.in_transition:
+            e.task = e.target_task
+            e.alloc = e.target_alloc
+            e.staged_task = None
+            e.staged_alloc = None
+            if self.trace is not None:
+                self.trace.record(t, "realloc", name, committed=e.alloc)
+            return "committed"
+        return "none"
+
+    def update_rate(
+        self, name: str, period: float, deadline: float, t: float = 0.0
+    ) -> SchedDecision:
+        """Mode change: re-rate ``name`` to (T, D), keeping its segments.
+
+        Certified against the transitional envelope (min T, min D while old
+        and new jobs can coexist); committed at the task's next job
+        boundary (boundary mode) or immediately (instant mode).  Rejection
+        leaves the old rate — and all controller state — untouched."""
+        e = self._entries.get(name)
+        if e is None:
+            return SchedDecision(False, None, None,
+                                 reason=f"no resident task {name!r}")
+        if e.departing:
+            return SchedDecision(False, None, None,
+                                 reason=f"task {name!r} is departing")
+        try:
+            new_task = dataclasses.replace(
+                e.target_task, period=period, deadline=deadline
+            )
+        except ValueError as err:
+            return SchedDecision(False, None, None, reason=str(err))
+
+        cands = [x.copy() for x in self._entries.values()]
+        cand = next(c for c in cands if c.task.name == name)
+        if self.transition == "instant":
+            # no jobs span the switch: certify the pure new-parameter set
+            # (the min(T)/min(D) envelope would spuriously reject mixed
+            # changes like a longer deadline with a shorter period)
+            cand.task = new_task
+            cand.staged_task = None
+        else:
+            cand.staged_task = new_task
+        fork = self._tables.fork()
+        memo = dict(self._memo)
+        bounds, analyses, reason = self._certify(cands, fork, memo, probe=name)
+        if bounds is None:
+            return SchedDecision(
+                False, None, None, tried=analyses,
+                reason=f"rate change unschedulable: {reason}",
+            )
+        for c in cands:
+            self._entries[c.task.name] = c
+        self._bounds = bounds
+        self._tables.adopt(fork)
+        self._memo = memo
+        self._trim_caches()
+        self.epoch += 1
+        if self.trace is not None:
+            self.trace.record(t, "update", name, period=period,
+                              deadline=deadline)
+        return SchedDecision(
+            admitted=True,
+            alloc=self.target_allocation,
+            bounds=dict(bounds),
+            path="update",
+            tried=analyses,
+        )

@@ -1,0 +1,132 @@
+"""Event-trace telemetry for the online scheduler.
+
+Every layer of the runtime — the :class:`DynamicController`, the
+discrete-event simulator and the wall-clock executor — can record into one
+:class:`EventTrace`.  Events carry a scheduler-domain kind:
+
+  lifecycle   admit, reject, depart, reclaim, update, realloc
+  per job     release, start, preempt, resume, complete, miss
+
+The trace exports to the Chrome trace-event JSON format (load in
+``chrome://tracing`` or Perfetto): one timeline row (``tid``) per task,
+``B``/``E`` duration slices spanning release→completion of each job, and
+instant events for everything else.  Deadline misses become flow-less
+instant events with the overshoot attached, so a miss is one click away
+from the preemptions that caused it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Iterable, Optional
+
+__all__ = ["TraceEvent", "EventTrace"]
+
+#: kinds that open/close a job duration slice in the Chrome export
+_JOB_BEGIN = "release"
+_JOB_END = "complete"
+
+#: every kind the runtime layers emit (documented contract, not enforced)
+KINDS = (
+    "admit", "reject", "depart", "reclaim", "update", "realloc",
+    "release", "start", "preempt", "resume", "complete", "miss",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceEvent:
+    t: float              # timestamp in the producer's clock unit
+    kind: str
+    task: str
+    meta: tuple = ()      # sorted (key, value) pairs — hashable, JSON-able
+
+    def as_dict(self) -> dict:
+        return {"t": self.t, "kind": self.kind, "task": self.task,
+                "meta": dict(self.meta)}
+
+
+class EventTrace:
+    """Append-only scheduler event log with Chrome-trace export.
+
+    ``us_per_unit`` converts the producer's clock to microseconds (the
+    Chrome trace unit): the simulator runs in model milliseconds
+    (``us_per_unit=1000``), the wall-clock executor in seconds
+    (``us_per_unit=1e6``).
+    """
+
+    def __init__(self, us_per_unit: float = 1000.0, label: str = "rtgpu"):
+        self.us_per_unit = us_per_unit
+        self.label = label
+        self.events: list[TraceEvent] = []
+
+    def record(self, t: float, kind: str, task: str, **meta) -> TraceEvent:
+        ev = TraceEvent(
+            t=float(t), kind=kind, task=task,
+            meta=tuple(sorted(meta.items())),
+        )
+        self.events.append(ev)
+        return ev
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def counts(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for ev in self.events:
+            out[ev.kind] = out.get(ev.kind, 0) + 1
+        return out
+
+    def by_task(self, task: str) -> list[TraceEvent]:
+        return [ev for ev in self.events if ev.task == task]
+
+    def misses(self) -> list[TraceEvent]:
+        return [ev for ev in self.events if ev.kind == "miss"]
+
+    # ---- Chrome trace-event export -----------------------------------------
+
+    def to_chrome(self) -> dict:
+        """The Chrome trace-event JSON object (``traceEvents`` array form).
+
+        Job slices pair ``release → complete`` for producers where releases
+        strictly alternate with completions (the simulators: at most one
+        job in flight per task).  When the trace contains ``start`` events
+        (the wall-clock executor, which can queue several released jobs
+        behind one running job), slices pair ``start → complete`` instead
+        and releases render as instants — B/E events are stack-paired per
+        timeline row in Chrome, so the opener must alternate with the
+        closer."""
+        begin_kind = (
+            "start"
+            if any(ev.kind == "start" for ev in self.events)
+            else _JOB_BEGIN
+        )
+        rows: list[dict] = []
+        tids: dict[str, int] = {}
+
+        def tid(task: str) -> int:
+            if task not in tids:
+                tids[task] = len(tids) + 1
+                rows.append({
+                    "name": "thread_name", "ph": "M", "pid": 1,
+                    "tid": tids[task], "args": {"name": task},
+                })
+            return tids[task]
+
+        rows.append({"name": "process_name", "ph": "M", "pid": 1,
+                     "args": {"name": self.label}})
+        for ev in self.events:
+            ts = ev.t * self.us_per_unit
+            base = {"pid": 1, "tid": tid(ev.task), "ts": ts,
+                    "cat": "sched", "args": dict(ev.meta)}
+            if ev.kind == begin_kind:
+                rows.append({**base, "name": f"{ev.task} job", "ph": "B"})
+            elif ev.kind == _JOB_END:
+                rows.append({**base, "name": f"{ev.task} job", "ph": "E"})
+            else:
+                rows.append({**base, "name": ev.kind, "ph": "i", "s": "t"})
+        return {"traceEvents": rows, "displayTimeUnit": "ms"}
+
+    def dump(self, path: str) -> str:
+        with open(path, "w") as fh:
+            json.dump(self.to_chrome(), fh, indent=None, separators=(",", ":"))
+        return path

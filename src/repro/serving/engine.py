@@ -37,12 +37,21 @@ class ServeConfig:
 
 
 class ServingEngine:
-    """One model, fixed batch slots, continuous decode."""
+    """One model, fixed batch slots, continuous decode.
+
+    Optionally registers with the online scheduler: ``rt_register`` asks a
+    :class:`repro.sched.DynamicController` to admit this engine's periodic
+    decode service (converted to an RTGPU task via the roofline-derived
+    chain in ``repro.runtime.task_spec``), and ``rt_deregister`` departs
+    through the mode-change protocol (slices reclaimed at the job
+    boundary, never mid-request).
+    """
 
     def __init__(self, cfg: ModelConfig, serve: ServeConfig, params=None,
                  seed: int = 0):
         self.cfg = cfg
         self.serve = serve
+        self._rt = None            # (controller, service name) when admitted
         self.model = Model(cfg)
         key = jax.random.PRNGKey(seed)
         self.params = params if params is not None else self.model.init_params(key)
@@ -67,6 +76,39 @@ class ServingEngine:
 
         self._prefill = prefill_fn
         self._decode = decode_fn
+
+    # ---- online-scheduler registration --------------------------------------
+
+    def rt_register(self, controller, spec, t: float = 0.0):
+        """Admit this engine as an RT service on ``controller``
+        (:class:`repro.sched.DynamicController` or the static
+        :class:`repro.runtime.AdmissionController`).  Returns the
+        controller's decision; on success the engine remembers its
+        registration for :meth:`rt_deregister`."""
+        from repro.runtime.task_spec import serving_task_to_rt
+
+        task = serving_task_to_rt(spec)
+        if hasattr(controller, "job_boundary"):   # online controller: clocked
+            dec = controller.admit(task, t=t)
+        else:                                     # static wrapper front door
+            dec = controller.admit(task)
+        if dec.admitted:
+            self._rt = (controller, spec.name)
+        return dec
+
+    def rt_deregister(self, t: float = 0.0) -> bool:
+        """Depart from the scheduler (job-boundary reclamation)."""
+        if self._rt is None:
+            return False
+        controller, name = self._rt
+        self._rt = None
+        if hasattr(controller, "release"):
+            return controller.release(name, t=t)
+        return controller.remove(name)
+
+    @property
+    def rt_registered(self) -> bool:
+        return self._rt is not None
 
     def generate(
         self,
