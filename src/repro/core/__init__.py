@@ -38,12 +38,15 @@ from .federated import (
 )
 from .baselines import analyze_self_suspension, analyze_stgm
 from .generator import (
+    GOLDEN_SCENARIOS,
     ChurnConfig,
     ChurnEvent,
     GeneratorConfig,
+    ScenarioPreset,
     generate_churn_trace,
     generate_taskset,
     generate_tasksets,
+    golden_scenario,
 )
 from .interleave import (
     INTERLEAVE_RATIO_MAX,
@@ -85,6 +88,9 @@ __all__ = [
     "ChurnConfig",
     "ChurnEvent",
     "generate_churn_trace",
+    "ScenarioPreset",
+    "GOLDEN_SCENARIOS",
+    "golden_scenario",
     "INTERLEAVE_RATIO_MAX",
     "KERNEL_TYPES",
     "VirtualSMModel",

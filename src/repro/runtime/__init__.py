@@ -4,13 +4,21 @@ task_spec.py   model-serving job -> RTGPU (CL, ML, G) task chain, with GPU
                parameters taken from the dry-run roofline artifact
 admission.py   Algorithm-2 admission control over mesh slices (thin wrapper
                over the online repro.sched.DynamicController)
-simulator.py   discrete-event federated executor (Figs. 12-13 analogue),
-               plus the churn-trace executor validating the online
-               scheduler's mode-change protocol
+engine.py      THE discrete-event engine: one CPU-preemptive /
+               bus-non-preemptive / federated-GPU arbitration loop,
+               parameterized by a SchedulingPolicy (membership, priority,
+               releases, completion bookkeeping)
+simulator.py   the two shipped policies over the engine — simulate()
+               (fixed task set, Figs. 12-13 analogue) and simulate_churn()
+               (dynamic membership validating the online scheduler's
+               mode-change protocol)
+record_golden.py  CLI recording the golden-trace regression corpus
+               (tests/golden/) replayed by tests/test_golden_traces.py
 executor.py    wall-clock best-effort executor for real small models (demo),
                with live service join/leave and event-trace telemetry
 """
 from .admission import AdmissionController, AdmissionDecision
+from .engine import DiscreteEventEngine, EngineJob, SchedulingPolicy
 from .executor import Service, WallClockExecutor
 from .simulator import ChurnSimResult, SimResult, simulate, simulate_churn
 from .task_spec import ServingTaskSpec, serving_task_to_rt
@@ -18,6 +26,9 @@ from .task_spec import ServingTaskSpec, serving_task_to_rt
 __all__ = [
     "AdmissionController",
     "AdmissionDecision",
+    "DiscreteEventEngine",
+    "EngineJob",
+    "SchedulingPolicy",
     "SimResult",
     "simulate",
     "ChurnSimResult",

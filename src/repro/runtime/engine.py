@@ -1,0 +1,235 @@
+"""Unified discrete-event engine for RT CPU–bus–accelerator execution.
+
+One event loop implements the RTGPU runtime rules shared by every
+simulator variant:
+
+  * CPU: preemptive fixed-priority (one core) — the highest-priority
+    member with a ready CPU segment owns the core each step;
+  * bus: non-preemptive fixed-priority (one PCIe-like channel) — the
+    holder keeps the bus until its copy completes, then the
+    highest-priority waiter takes over;
+  * accelerator: federated — every member owns dedicated virtual SMs, so
+    GPU segments always run (no contention by construction);
+
+plus segment-completion bookkeeping (advance the chain, release the bus
+after a copy, detect job completion) and :class:`~repro.sched.EventTrace`
+emission for ``release`` and ``preempt`` events.
+
+Everything *workload-specific* — who the members are, their priority
+order, when jobs are released, what happens when one completes — lives in
+a :class:`SchedulingPolicy`.  ``repro.runtime.simulator`` provides the two
+shipped policies: a fixed task set (:func:`~repro.runtime.simulate`) and
+dynamic membership under the online controller
+(:func:`~repro.runtime.simulate_churn`).  New variants (preemptive GPU
+slices, urgency-aware launching) add a policy, not a third copy of the
+arbitration loop.
+
+Determinism contract: the engine iterates members only in the policy's
+arbitration order and never touches an unordered set, so a run is a pure
+function of (policy state, RNG seed) — the property the golden-trace
+corpus under ``tests/golden/`` pins.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+import math
+from typing import Hashable, Optional
+
+from repro.core import SegmentKind
+from repro.sched import EventTrace
+
+__all__ = ["EngineJob", "SchedulingPolicy", "DiscreteEventEngine"]
+
+_EPS = 1e-9
+
+
+@dataclasses.dataclass
+class EngineJob:
+    """One job in flight: a segment chain with per-segment durations.
+
+    ``key`` — the policy's member handle (task index, service name, …) —
+    is filled in by :meth:`DiscreteEventEngine.start_job`; ``bound``
+    carries the analytic R̂ certified for this job where the policy
+    tracks one (``inf`` means untracked)."""
+
+    release: float
+    deadline_abs: float
+    chain: list                    # [(SegmentKind, index-within-kind), ...]
+    durations: list                # one duration per chain segment
+    seg_idx: int = 0
+    remaining: float = 0.0         # remaining time of the current segment
+    bound: float = math.inf
+    key: Hashable = None
+
+
+class SchedulingPolicy(abc.ABC):
+    """Membership / priority / lifecycle hooks driving the engine.
+
+    The engine owns the member → in-flight-job map (``engine.jobs``; a
+    ``None`` value means the member is idle) and calls the hooks in loop
+    order: ``begin_step`` → ``release_jobs`` → ``arbitration_order`` →
+    (advance time) → ``on_job_complete`` per finished job."""
+
+    engine: "DiscreteEventEngine"
+
+    #: loop-guard slack: the engine runs while ``now < horizon - slack``
+    horizon_slack: float = 0.0
+
+    def bind(self, engine: "DiscreteEventEngine") -> None:
+        """Called once by the engine constructor; seed initial membership
+        (``engine.jobs`` keys) here."""
+        self.engine = engine
+
+    def begin_step(self, now: float) -> None:
+        """External world first: membership changes (admissions,
+        departures) due at ``now``.  Default: nothing."""
+
+    @abc.abstractmethod
+    def release_jobs(self, now: float) -> None:
+        """Create jobs whose release time has arrived, via
+        :meth:`DiscreteEventEngine.start_job`."""
+
+    @abc.abstractmethod
+    def arbitration_order(self) -> list:
+        """Member keys from highest to lowest fixed priority.  The engine
+        resolves CPU/bus contention — and processes simultaneous
+        completions — in exactly this order."""
+
+    @abc.abstractmethod
+    def next_external_time(self, now: float) -> float:
+        """Absolute time of the next policy-side event (pending release,
+        churn event, …); ``inf`` when none is scheduled."""
+
+    @abc.abstractmethod
+    def on_job_complete(self, key, job: EngineJob, now: float,
+                        response: float) -> None:
+        """Job bookkeeping: record the response, trace ``complete`` /
+        ``miss``, schedule the next release, run boundary protocols.  Must
+        clear ``engine.jobs[key]`` (or remove the member)."""
+
+    def display_name(self, key) -> str:
+        """Task name used in trace events for ``key``."""
+        return str(key)
+
+
+class DiscreteEventEngine:
+    """The shared event loop.  Construct with a policy, call :meth:`run`.
+
+    State exposed to policies: ``jobs`` (member → job-or-None), ``now``,
+    and ``record`` for trace emission in the engine's clock."""
+
+    def __init__(
+        self,
+        policy: SchedulingPolicy,
+        trace: Optional[EventTrace] = None,
+    ):
+        self.policy = policy
+        self.trace = trace
+        self.jobs: dict[Hashable, Optional[EngineJob]] = {}
+        self.now = 0.0
+        self.bus_owner: Optional[Hashable] = None   # non-preemptive holder
+        self._last_cpu_owner: Optional[Hashable] = None
+        policy.bind(self)
+
+    def record(self, kind: str, key, **meta) -> None:
+        if self.trace is not None:
+            self.trace.record(self.now, kind, self.policy.display_name(key),
+                              **meta)
+
+    def seg_kind(self, key) -> Optional[SegmentKind]:
+        """Current segment kind of ``key``'s job (None when idle/absent)."""
+        job = self.jobs.get(key)
+        if job is None:
+            return None
+        return job.chain[job.seg_idx][0]
+
+    def start_job(self, key, job: EngineJob) -> None:
+        """Install a newly released job and trace its release."""
+        job.key = key
+        job.remaining = job.durations[0]
+        self.jobs[key] = job
+        self.record("release", key, deadline=job.deadline_abs)
+
+    def run(self, horizon: float) -> None:
+        policy = self.policy
+        while self.now < horizon - policy.horizon_slack:
+            # 1. external events, then releases due now
+            policy.begin_step(self.now)
+            policy.release_jobs(self.now)
+
+            # 2. arbitration under the policy's fixed-priority order
+            order = policy.arbitration_order()
+            cpu_owner = next(
+                (k for k in order if self.seg_kind(k) is SegmentKind.CPU),
+                None,
+            )
+            last = self._last_cpu_owner
+            if (
+                self.trace is not None
+                and last is not None
+                and cpu_owner != last
+                and self.seg_kind(last) is SegmentKind.CPU
+                and self.jobs[last].remaining > _EPS
+            ):
+                self.record(
+                    "preempt", last,
+                    by=policy.display_name(cpu_owner)
+                    if cpu_owner is not None else "",
+                )
+            self._last_cpu_owner = cpu_owner
+
+            if (
+                self.bus_owner is not None
+                and self.seg_kind(self.bus_owner) is not SegmentKind.MEM
+            ):
+                self.bus_owner = None
+            if self.bus_owner is None:
+                self.bus_owner = next(
+                    (k for k in order if self.seg_kind(k) is SegmentKind.MEM),
+                    None,
+                )
+
+            # running: CPU owner, bus holder, every GPU segment (dedicated
+            # lanes) — kept in arbitration order for deterministic
+            # completion processing
+            running = []
+            if cpu_owner is not None:
+                running.append(cpu_owner)
+            if self.bus_owner is not None:
+                running.append(self.bus_owner)
+            for k in order:
+                if self.seg_kind(k) is SegmentKind.GPU:
+                    running.append(k)
+
+            # 3. next event: earliest completion or policy-side event
+            dt = math.inf
+            for k in running:
+                dt = min(dt, self.jobs[k].remaining)
+            dt = min(dt, policy.next_external_time(self.now) - self.now)
+            if not math.isfinite(dt):
+                break
+            dt = max(dt, 0.0)
+            step_end = min(self.now + dt, horizon)
+            dt = step_end - self.now
+
+            for k in running:
+                self.jobs[k].remaining -= dt
+            self.now = step_end
+
+            # 4. completions, in arbitration order
+            for k in running:
+                job = self.jobs.get(k)
+                if job is None or job.remaining > _EPS:
+                    continue
+                if (
+                    job.chain[job.seg_idx][0] is SegmentKind.MEM
+                    and self.bus_owner == k
+                ):
+                    self.bus_owner = None
+                job.seg_idx += 1
+                if job.seg_idx < len(job.chain):
+                    job.remaining = job.durations[job.seg_idx]
+                    continue
+                policy.on_job_complete(k, job, self.now,
+                                       self.now - job.release)

@@ -13,21 +13,26 @@ with per-job segment durations sampled from [lo, hi] (worst-case model:
 lo == hi).  Observed response times validate the analysis bounds:
 tests assert  observed R ≤ analytic R̂  for admitted sets.
 
-Two entry points:
-  * :func:`simulate` — fixed task set over a horizon (the seed behavior);
-  * :func:`simulate_churn` — dynamic membership: an admit/release event
-    trace is fed through a :class:`repro.sched.DynamicController`, slices
-    are reclaimed only at job boundaries (mode-change protocol), and every
-    completed job is checked against the analytic bound certified by the
-    admission epoch it was released in.
+Both entry points are thin policies over the one shared
+:class:`repro.runtime.engine.DiscreteEventEngine` (the arbitration loop
+lives there, exactly once):
+
+  * :func:`simulate` — :class:`_FixedTaskSetPolicy`: a frozen task set
+    over a horizon, priority = taskset order (the seed behavior);
+  * :func:`simulate_churn` — :class:`_ChurnPolicy`: dynamic membership —
+    an admit/release event trace is fed through a
+    :class:`repro.sched.DynamicController`, slices are reclaimed only at
+    job boundaries (mode-change protocol), and every completed job is
+    checked against the analytic bound certified by the admission epoch it
+    was released in.
 
 Both record into an optional :class:`repro.sched.EventTrace` (releases,
-CPU preemptions, completions, deadline misses) for Chrome-trace export.
+CPU preemptions, completions, deadline misses); the golden corpus under
+``tests/golden/`` pins their observable behavior event by event.
 """
 from __future__ import annotations
 
 import dataclasses
-import heapq
 import math
 from typing import Optional, Sequence
 
@@ -35,6 +40,8 @@ import numpy as np
 
 from repro.core import ChurnEvent, RTTask, SegmentKind, TaskSet
 from repro.sched import DynamicController, EventTrace
+
+from .engine import DiscreteEventEngine, EngineJob, SchedulingPolicy
 
 __all__ = ["SimResult", "simulate", "ChurnSimResult", "simulate_churn"]
 
@@ -53,17 +60,6 @@ class SimResult:
 
     def max_response(self, i: int) -> float:
         return max(self.responses[i]) if self.responses[i] else 0.0
-
-
-@dataclasses.dataclass
-class _Job:
-    task_id: int
-    release: float
-    deadline_abs: float
-    seg_idx: int = 0
-    remaining: float = 0.0          # remaining time of the current segment
-    durations: Optional[list] = None
-    done: bool = False
 
 
 def _sample_durations(
@@ -87,6 +83,84 @@ def _sample_durations(
     return out
 
 
+class _FixedTaskSetPolicy(SchedulingPolicy):
+    """Frozen membership: every task is resident for the whole run.
+
+    Priority = taskset order (0 highest).  Sporadic releases: period T_i
+    plus optional random inter-arrival slack (sporadic ≥ T)."""
+
+    def __init__(
+        self,
+        taskset: TaskSet,
+        alloc: list[int],
+        rng: np.random.Generator,
+        release_jitter: bool,
+        worst_case: bool,
+    ):
+        self.taskset = taskset
+        self.alloc = alloc
+        self.rng = rng
+        self.release_jitter = release_jitter
+        self.worst_case = worst_case
+        self.chains = [t.chain() for t in taskset]
+        self.names = [t.name or f"task{i}" for i, t in enumerate(taskset)]
+        self.releases = [
+            float(rng.uniform(0, t.period)) if release_jitter else 0.0
+            for t in taskset
+        ]
+        n = len(taskset)
+        self.responses: list[list[float]] = [[] for _ in range(n)]
+        self.misses = [0] * n
+        self.completed = [0] * n
+
+    def bind(self, engine: DiscreteEventEngine) -> None:
+        super().bind(engine)
+        engine.jobs = {i: None for i in range(len(self.taskset))}
+
+    def release_jobs(self, now: float) -> None:
+        eng = self.engine
+        for i, t in enumerate(self.taskset):
+            if eng.jobs[i] is None and self.releases[i] <= now + _EPS:
+                eng.start_job(i, EngineJob(
+                    release=self.releases[i],
+                    deadline_abs=self.releases[i] + t.deadline,
+                    chain=self.chains[i],
+                    durations=_sample_durations(
+                        t, 2 * self.alloc[i], self.rng, self.worst_case
+                    ),
+                ))
+
+    def arbitration_order(self) -> list:
+        return list(range(len(self.taskset)))
+
+    def next_external_time(self, now: float) -> float:
+        return min(
+            (self.releases[i] for i in range(len(self.taskset))
+             if self.engine.jobs[i] is None),
+            default=math.inf,
+        )
+
+    def on_job_complete(self, key, job, now, response) -> None:
+        eng = self.engine
+        task = self.taskset[key]
+        self.responses[key].append(response)
+        self.completed[key] += 1
+        eng.record("complete", key, response=response)
+        if response > task.deadline + 1e-6:
+            self.misses[key] += 1
+            eng.record("miss", key, overshoot=response - task.deadline)
+        # next sporadic release
+        gap = (
+            float(self.rng.uniform(0, 0.2 * task.period))
+            if self.release_jitter else 0.0
+        )
+        self.releases[key] = max(job.release + task.period + gap, now)
+        eng.jobs[key] = None
+
+    def display_name(self, key) -> str:
+        return self.names[key]
+
+
 def simulate(
     taskset: TaskSet,
     alloc: list[int],
@@ -96,131 +170,17 @@ def simulate(
     worst_case: bool = False,
     trace: Optional[EventTrace] = None,
 ) -> SimResult:
-    """Run the federated RT executor for ``horizon`` time units.
-
-    Priority = taskset order (0 highest).  Sporadic releases: period T_i
-    plus optional random inter-arrival slack (sporadic ≥ T)."""
-    n = len(taskset)
-    rng = np.random.default_rng(seed)
-    chains = [t.chain() for t in taskset]
-    names = [t.name or f"task{i}" for i, t in enumerate(taskset)]
-
-    releases: list[float] = []
-    for i, t in enumerate(taskset):
-        releases.append(float(rng.uniform(0, t.period)) if release_jitter else 0.0)
-
-    jobs: list[Optional[_Job]] = [None] * n  # at most one active job per task
-    responses: list[list[float]] = [[] for _ in range(n)]
-    misses = [0] * n
-    completed = [0] * n
-
-    now = 0.0
-    bus_running: Optional[int] = None  # task id holding the bus (non-preempt)
-    last_cpu_owner: Optional[int] = None
-
-    def seg_kind(i: int) -> Optional[SegmentKind]:
-        j = jobs[i]
-        if j is None or j.done:
-            return None
-        return chains[i][j.seg_idx][0]
-
-    while now < horizon:
-        # release new jobs
-        for i, t in enumerate(taskset):
-            if jobs[i] is None and releases[i] <= now + _EPS:
-                j = _Job(
-                    task_id=i,
-                    release=releases[i],
-                    deadline_abs=releases[i] + t.deadline,
-                    durations=_sample_durations(t, 2 * alloc[i], rng, worst_case),
-                )
-                j.remaining = j.durations[0]
-                jobs[i] = j
-                if trace is not None:
-                    trace.record(now, "release", names[i],
-                                 deadline=j.deadline_abs)
-
-        # pick CPU owner: highest-priority ready CPU segment (preemptive)
-        cpu_owner = next(
-            (i for i in range(n) if seg_kind(i) is SegmentKind.CPU), None
-        )
-        if (
-            trace is not None
-            and last_cpu_owner is not None
-            and cpu_owner != last_cpu_owner
-            and seg_kind(last_cpu_owner) is SegmentKind.CPU
-            and jobs[last_cpu_owner].remaining > _EPS
-        ):
-            trace.record(now, "preempt", names[last_cpu_owner],
-                         by=names[cpu_owner] if cpu_owner is not None else "")
-        last_cpu_owner = cpu_owner
-        # bus owner: keep non-preemptive holder; else highest-priority waiter
-        if bus_running is not None and seg_kind(bus_running) is not SegmentKind.MEM:
-            bus_running = None
-        if bus_running is None:
-            bus_running = next(
-                (i for i in range(n) if seg_kind(i) is SegmentKind.MEM), None
-            )
-
-        # running set: cpu owner, bus owner, every GPU segment (dedicated)
-        running = set()
-        if cpu_owner is not None:
-            running.add(cpu_owner)
-        if bus_running is not None:
-            running.add(bus_running)
-        for i in range(n):
-            if seg_kind(i) is SegmentKind.GPU:
-                running.add(i)
-
-        # next event time: earliest completion or next release
-        dt = math.inf
-        for i in running:
-            dt = min(dt, jobs[i].remaining)
-        for i in range(n):
-            if jobs[i] is None:
-                dt = min(dt, releases[i] - now)
-        if not math.isfinite(dt):
-            break
-        dt = max(dt, 0.0)
-        step_end = min(now + dt, horizon)
-        dt = step_end - now
-
-        for i in running:
-            jobs[i].remaining -= dt
-        now = step_end
-
-        # process completions
-        for i in list(running):
-            j = jobs[i]
-            if j.remaining <= _EPS:
-                if chains[i][j.seg_idx][0] is SegmentKind.MEM and bus_running == i:
-                    bus_running = None
-                j.seg_idx += 1
-                if j.seg_idx >= len(chains[i]):
-                    resp = now - j.release
-                    responses[i].append(resp)
-                    completed[i] += 1
-                    if trace is not None:
-                        trace.record(now, "complete", names[i],
-                                     response=resp)
-                    if resp > taskset[i].deadline + 1e-6:
-                        misses[i] += 1
-                        if trace is not None:
-                            trace.record(
-                                now, "miss", names[i],
-                                overshoot=resp - taskset[i].deadline,
-                            )
-                    # next sporadic release
-                    gap = 0.0
-                    if release_jitter:
-                        gap = float(rng.uniform(0, 0.2 * taskset[i].period))
-                    releases[i] = j.release + taskset[i].period + gap
-                    if releases[i] < now:
-                        releases[i] = now
-                    jobs[i] = None
-                else:
-                    j.remaining = j.durations[j.seg_idx]
-    return SimResult(responses=responses, misses=misses, jobs=completed)
+    """Run the federated RT executor for ``horizon`` time units."""
+    policy = _FixedTaskSetPolicy(
+        taskset, alloc, np.random.default_rng(seed), release_jitter,
+        worst_case,
+    )
+    DiscreteEventEngine(policy, trace=trace).run(horizon)
+    return SimResult(
+        responses=policy.responses,
+        misses=policy.misses,
+        jobs=policy.completed,
+    )
 
 
 # ---- dynamic-membership executor (online scheduler validation) --------------
@@ -259,16 +219,137 @@ class ChurnSimResult:
         return sum(self.jobs.values())
 
 
-@dataclasses.dataclass
-class _ChurnJob:
-    name: str
-    release: float
-    deadline_abs: float
-    chain: list
-    durations: list
-    bound: float                  # analytic R̂ at release epoch
-    seg_idx: int = 0
-    remaining: float = 0.0
+class _ChurnPolicy(SchedulingPolicy):
+    """Dynamic membership under the online controller.
+
+    Every ``admit`` event goes through the controller's transitional
+    analysis; rejected services never run.  A ``release`` event marks the
+    service departing — its job in flight finishes and only then does
+    :meth:`DynamicController.job_boundary` reclaim the slices (the
+    mode-change protocol).  Each job samples durations with the task
+    parameters and slice count *committed at its release*, and is checked
+    against the analytic bound of that epoch."""
+
+    horizon_slack = _EPS
+
+    def __init__(
+        self,
+        events: Sequence[ChurnEvent],
+        controller: DynamicController,
+        rng: np.random.Generator,
+        release_jitter: bool,
+        worst_case: bool,
+    ):
+        self.controller = controller
+        self.rng = rng
+        self.release_jitter = release_jitter
+        self.worst_case = worst_case
+        self.pending = sorted(events, key=lambda e: (e.time, e.name))
+        self.ev_idx = 0
+        self.next_release: dict[str, float] = {}
+        self.responses: dict[str, list[float]] = {}
+        self.bounds: dict[str, list[float]] = {}
+        self.misses: dict[str, int] = {}
+        self.jobs_done: dict[str, int] = {}
+        self.admitted: list[str] = []
+        self.rejected: list[str] = []
+
+    def _finish_boundary(self, name: str, now: float) -> None:
+        """Job boundary for ``name``: reclaim if departing, else commit
+        staged mode changes; drop reclaimed services from membership."""
+        if self.controller.job_boundary(name, t=now) == "reclaimed":
+            self.engine.jobs.pop(name, None)
+            self.next_release.pop(name, None)
+
+    def begin_step(self, now: float) -> None:
+        eng = self.engine
+        ctl = self.controller
+        while (
+            self.ev_idx < len(self.pending)
+            and self.pending[self.ev_idx].time <= now + _EPS
+        ):
+            ev = self.pending[self.ev_idx]
+            self.ev_idx += 1
+            if ev.kind == "admit":
+                dec = ctl.admit(ev.task, t=now)
+                if dec.admitted:
+                    self.admitted.append(ev.name)
+                    eng.jobs[ev.name] = None
+                    self.next_release[ev.name] = now
+                    # setdefault: a re-admission of a departed name must
+                    # extend its history, not erase the first residency
+                    self.responses.setdefault(ev.name, [])
+                    self.bounds.setdefault(ev.name, [])
+                    self.misses.setdefault(ev.name, 0)
+                    self.jobs_done.setdefault(ev.name, 0)
+                    # a job spanning the reconfiguration sees the arrival's
+                    # interference: lift its bound to the new epoch's R̂
+                    # (certified over the transitional set, so valid for
+                    # jobs of either epoch)
+                    for name, job in eng.jobs.items():
+                        if job is not None:
+                            job.bound = max(job.bound, ctl.bound(name))
+                else:
+                    self.rejected.append(ev.name)
+            elif ev.kind == "release":
+                if ctl.release(ev.name, t=now) and eng.jobs.get(ev.name) is None:
+                    self._finish_boundary(ev.name, now)  # idle: reclaim now
+            else:
+                raise ValueError(f"unknown churn event kind {ev.kind!r}")
+
+    def release_jobs(self, now: float) -> None:
+        eng = self.engine
+        ctl = self.controller
+        for name in list(eng.jobs):
+            if (
+                eng.jobs[name] is None
+                and not ctl.is_departing(name)
+                and self.next_release[name] <= now + _EPS
+            ):
+                task = ctl.task(name)
+                eng.start_job(name, EngineJob(
+                    release=self.next_release[name],
+                    deadline_abs=self.next_release[name] + task.deadline,
+                    chain=task.chain(),
+                    durations=_sample_durations(
+                        task, 2 * ctl.allocation[name], self.rng,
+                        self.worst_case,
+                    ),
+                    bound=ctl.bound(name),
+                ))
+
+    def arbitration_order(self) -> list:
+        prio = {n: i for i, n in enumerate(self.controller.order())}
+        return sorted(self.engine.jobs, key=lambda n: prio.get(n, len(prio)))
+
+    def next_external_time(self, now: float) -> float:
+        t = math.inf
+        for name, job in self.engine.jobs.items():
+            if job is None and not self.controller.is_departing(name):
+                t = min(t, self.next_release[name])
+        if self.ev_idx < len(self.pending):
+            t = min(t, self.pending[self.ev_idx].time)
+        return t
+
+    def on_job_complete(self, key, job, now, response) -> None:
+        eng = self.engine
+        self.responses[key].append(response)
+        self.bounds[key].append(job.bound)
+        self.jobs_done[key] += 1
+        deadline = job.deadline_abs - job.release
+        eng.record("complete", key, response=response, bound=job.bound)
+        if response > deadline + 1e-6:
+            self.misses[key] += 1
+            eng.record("miss", key, overshoot=response - deadline)
+        eng.jobs[key] = None
+        self._finish_boundary(key, now)    # reclaim / commit staged changes
+        if key in eng.jobs:                # still resident: next sporadic gap
+            task = self.controller.task(key)
+            gap = (
+                float(self.rng.uniform(0, 0.2 * task.period))
+                if self.release_jitter else 0.0
+            )
+            self.next_release[key] = max(job.release + task.period + gap, now)
 
 
 def simulate_churn(
@@ -283,15 +364,7 @@ def simulate_churn(
     controller: Optional[DynamicController] = None,
     trace: Optional[EventTrace] = None,
 ) -> ChurnSimResult:
-    """Execute an admit/release churn trace under the online scheduler.
-
-    Every ``admit`` event goes through the controller's transitional
-    analysis; rejected services never run.  A ``release`` event marks the
-    service departing — its job in flight finishes and only then does
-    :meth:`DynamicController.job_boundary` reclaim the slices (the
-    mode-change protocol).  Each job samples durations with the task
-    parameters and slice count *committed at its release*, and is checked
-    against the analytic bound of that epoch."""
+    """Execute an admit/release churn trace under the online scheduler."""
     if controller is None:
         controller = DynamicController(
             gn_total,
@@ -301,189 +374,22 @@ def simulate_churn(
             trace=trace,
         )
     if controller.transition != "boundary":
-        # an instant controller reclaims mid-job, leaving the sim's active
-        # map pointing at entries the controller no longer knows
+        # an instant controller reclaims mid-job, leaving the engine's
+        # membership pointing at entries the controller no longer knows
         raise ValueError(
             "simulate_churn requires a boundary-transition controller "
             f"(got transition={controller.transition!r})"
         )
-    rng = np.random.default_rng(seed)
-    pending = sorted(events, key=lambda e: (e.time, e.name))
-    ev_idx = 0
-
-    active: dict[str, Optional[_ChurnJob]] = {}   # resident -> job in flight
-    next_release: dict[str, float] = {}
-    responses: dict[str, list[float]] = {}
-    bounds: dict[str, list[float]] = {}
-    misses: dict[str, int] = {}
-    jobs_done: dict[str, int] = {}
-    admitted: list[str] = []
-    rejected: list[str] = []
-
-    now = 0.0
-    bus_running: Optional[str] = None
-    last_cpu_owner: Optional[str] = None
-
-    def seg_kind(name: str) -> Optional[SegmentKind]:
-        j = active.get(name)
-        if j is None:
-            return None
-        return j.chain[j.seg_idx][0]
-
-    def finish_boundary(name: str) -> None:
-        """Job boundary for ``name``: reclaim if departing, else commit
-        staged mode changes; drop reclaimed services from the active map."""
-        if controller.job_boundary(name, t=now) == "reclaimed":
-            active.pop(name, None)
-            next_release.pop(name, None)
-
-    while now < horizon - _EPS:
-        # 1. churn events due now
-        while ev_idx < len(pending) and pending[ev_idx].time <= now + _EPS:
-            ev = pending[ev_idx]
-            ev_idx += 1
-            if ev.kind == "admit":
-                dec = controller.admit(ev.task, t=now)
-                if dec.admitted:
-                    admitted.append(ev.name)
-                    active[ev.name] = None
-                    next_release[ev.name] = now
-                    # setdefault: a re-admission of a departed name must
-                    # extend its history, not erase the first residency
-                    responses.setdefault(ev.name, [])
-                    bounds.setdefault(ev.name, [])
-                    misses.setdefault(ev.name, 0)
-                    jobs_done.setdefault(ev.name, 0)
-                    # a job spanning the reconfiguration sees the arrival's
-                    # interference: lift its bound to the new epoch's R̂
-                    # (certified over the transitional set, so valid for
-                    # jobs of either epoch)
-                    for n2, j2 in active.items():
-                        if j2 is not None:
-                            j2.bound = max(j2.bound, controller.bound(n2))
-                else:
-                    rejected.append(ev.name)
-            elif ev.kind == "release":
-                if controller.release(ev.name, t=now) and active.get(ev.name) is None:
-                    finish_boundary(ev.name)   # idle: reclaim immediately
-            else:
-                raise ValueError(f"unknown churn event kind {ev.kind!r}")
-
-        # 2. job releases (departing services release no new jobs)
-        for name in list(active):
-            if (
-                active[name] is None
-                and not controller.is_departing(name)
-                and next_release[name] <= now + _EPS
-            ):
-                task = controller.task(name)
-                vsm = 2 * controller.allocation[name]
-                j = _ChurnJob(
-                    name=name,
-                    release=next_release[name],
-                    deadline_abs=next_release[name] + task.deadline,
-                    chain=task.chain(),
-                    durations=_sample_durations(task, vsm, rng, worst_case),
-                    bound=controller.bound(name),
-                )
-                j.remaining = j.durations[0]
-                active[name] = j
-                if trace is not None:
-                    trace.record(now, "release", name, deadline=j.deadline_abs)
-
-        # 3. arbitration under the controller's current priority order
-        prio = {n: i for i, n in enumerate(controller.order())}
-        ready_cpu = sorted(
-            (n for n in active if seg_kind(n) is SegmentKind.CPU),
-            key=lambda n: prio.get(n, len(prio)),
-        )
-        cpu_owner = ready_cpu[0] if ready_cpu else None
-        if (
-            trace is not None
-            and last_cpu_owner is not None
-            and cpu_owner != last_cpu_owner
-            and seg_kind(last_cpu_owner) is SegmentKind.CPU
-            and active[last_cpu_owner].remaining > _EPS
-        ):
-            trace.record(now, "preempt", last_cpu_owner, by=cpu_owner or "")
-        last_cpu_owner = cpu_owner
-
-        if bus_running is not None and seg_kind(bus_running) is not SegmentKind.MEM:
-            bus_running = None
-        if bus_running is None:
-            ready_mem = sorted(
-                (n for n in active if seg_kind(n) is SegmentKind.MEM),
-                key=lambda n: prio.get(n, len(prio)),
-            )
-            bus_running = ready_mem[0] if ready_mem else None
-
-        running = set()
-        if cpu_owner is not None:
-            running.add(cpu_owner)
-        if bus_running is not None:
-            running.add(bus_running)
-        for name in active:
-            if seg_kind(name) is SegmentKind.GPU:
-                running.add(name)
-
-        # 4. next event time: completion, release, churn event, or horizon
-        dt = math.inf
-        for name in running:
-            dt = min(dt, active[name].remaining)
-        for name in active:
-            if active[name] is None and not controller.is_departing(name):
-                dt = min(dt, next_release[name] - now)
-        if ev_idx < len(pending):
-            dt = min(dt, pending[ev_idx].time - now)
-        if not math.isfinite(dt):
-            break
-        dt = max(dt, 0.0)
-        step_end = min(now + dt, horizon)
-        dt = step_end - now
-
-        for name in running:
-            active[name].remaining -= dt
-        now = step_end
-
-        # 5. completions
-        for name in list(running):
-            j = active.get(name)
-            if j is None or j.remaining > _EPS:
-                continue
-            if j.chain[j.seg_idx][0] is SegmentKind.MEM and bus_running == name:
-                bus_running = None
-            j.seg_idx += 1
-            if j.seg_idx < len(j.chain):
-                j.remaining = j.durations[j.seg_idx]
-                continue
-            # job done
-            resp = now - j.release
-            responses[name].append(resp)
-            bounds[name].append(j.bound)
-            jobs_done[name] += 1
-            deadline = j.deadline_abs - j.release
-            if trace is not None:
-                trace.record(now, "complete", name, response=resp,
-                             bound=j.bound)
-            if resp > deadline + 1e-6:
-                misses[name] += 1
-                if trace is not None:
-                    trace.record(now, "miss", name,
-                                 overshoot=resp - deadline)
-            active[name] = None
-            finish_boundary(name)          # reclaim / commit staged changes
-            if name in active:             # still resident: next sporadic gap
-                task = controller.task(name)
-                gap = 0.0
-                if release_jitter:
-                    gap = float(rng.uniform(0, 0.2 * task.period))
-                next_release[name] = max(j.release + task.period + gap, now)
-
+    policy = _ChurnPolicy(
+        events, controller, np.random.default_rng(seed), release_jitter,
+        worst_case,
+    )
+    DiscreteEventEngine(policy, trace=trace).run(horizon)
     return ChurnSimResult(
-        responses=responses,
-        bounds=bounds,
-        misses=misses,
-        jobs=jobs_done,
-        admitted=admitted,
-        rejected=rejected,
+        responses=policy.responses,
+        bounds=policy.bounds,
+        misses=policy.misses,
+        jobs=policy.jobs_done,
+        admitted=policy.admitted,
+        rejected=policy.rejected,
     )

@@ -13,6 +13,14 @@ The trace exports to the Chrome trace-event JSON format (load in
 instant events for everything else.  Deadline misses become flow-less
 instant events with the overshoot attached, so a miss is one click away
 from the preemptions that caused it.
+
+Besides the (lossy, render-oriented) Chrome export, traces round-trip
+losslessly through a native JSON form: ``to_json``/``from_json`` (objects)
+and ``save``/``load`` (files) preserve every event verbatim, which is what
+the golden-trace regression corpus under ``tests/golden/`` is built on.
+``EventTrace.diff`` locates the first divergent event between two traces —
+the regression harness and the CI job report that instead of a bare
+assert.
 """
 from __future__ import annotations
 
@@ -33,12 +41,22 @@ KINDS = (
 )
 
 
+def _jsonify(value):
+    """Normalize a meta value into JSON-native shape (tuples → lists,
+    recursively) so the JSON round-trip is lossless by construction."""
+    if isinstance(value, (tuple, list)):
+        return [_jsonify(v) for v in value]
+    if isinstance(value, dict):
+        return {k: _jsonify(v) for k, v in value.items()}
+    return value
+
+
 @dataclasses.dataclass(frozen=True)
 class TraceEvent:
     t: float              # timestamp in the producer's clock unit
     kind: str
     task: str
-    meta: tuple = ()      # sorted (key, value) pairs — hashable, JSON-able
+    meta: tuple = ()      # sorted (key, value) pairs, JSON-native values
 
     def as_dict(self) -> dict:
         return {"t": self.t, "kind": self.kind, "task": self.task,
@@ -62,7 +80,7 @@ class EventTrace:
     def record(self, t: float, kind: str, task: str, **meta) -> TraceEvent:
         ev = TraceEvent(
             t=float(t), kind=kind, task=task,
-            meta=tuple(sorted(meta.items())),
+            meta=tuple(sorted((k, _jsonify(v)) for k, v in meta.items())),
         )
         self.events.append(ev)
         return ev
@@ -81,6 +99,72 @@ class EventTrace:
 
     def misses(self) -> list[TraceEvent]:
         return [ev for ev in self.events if ev.kind == "miss"]
+
+    def diff(
+        self, other: "EventTrace | Iterable[TraceEvent]"
+    ) -> Optional[tuple[int, Optional[TraceEvent], Optional[TraceEvent]]]:
+        """First divergence against ``other``: ``(index, ours, theirs)``.
+
+        A missing event on either side shows up as ``None``; identical
+        traces return ``None``.  Compares the full event tuple (t, kind,
+        task, meta) — the equality the golden-trace harness enforces."""
+        theirs = other.events if isinstance(other, EventTrace) else list(other)
+        for i in range(max(len(self.events), len(theirs))):
+            a = self.events[i] if i < len(self.events) else None
+            b = theirs[i] if i < len(theirs) else None
+            if a != b:
+                return i, a, b
+        return None
+
+    # ---- lossless JSON round-trip ------------------------------------------
+
+    def to_json(self) -> dict:
+        """Native JSON object preserving every event verbatim (unlike the
+        render-oriented :meth:`to_chrome`)."""
+        return {
+            "format": 1,
+            "label": self.label,
+            "us_per_unit": self.us_per_unit,
+            "events": [ev.as_dict() for ev in self.events],
+        }
+
+    @classmethod
+    def from_json(cls, doc: dict) -> "EventTrace":
+        fmt = doc.get("format", 1)
+        if fmt != 1:
+            raise ValueError(f"unsupported EventTrace format {fmt!r}")
+        trace = cls(
+            us_per_unit=float(doc.get("us_per_unit", 1000.0)),
+            label=str(doc.get("label", "rtgpu")),
+        )
+        for ev in doc.get("events", ()):
+            trace.events.append(TraceEvent(
+                t=float(ev["t"]),
+                kind=str(ev["kind"]),
+                task=str(ev["task"]),
+                meta=tuple(sorted(ev.get("meta", {}).items())),
+            ))
+        return trace
+
+    def dumps(self) -> str:
+        """Canonical JSON text: sorted keys, no whitespace — byte-stable
+        under ``dumps → loads/from_json → dumps`` (golden-file contract)."""
+        return json.dumps(self.to_json(), sort_keys=True,
+                          separators=(",", ":"))
+
+    @classmethod
+    def loads(cls, text: str) -> "EventTrace":
+        return cls.from_json(json.loads(text))
+
+    def save(self, path: str) -> str:
+        with open(path, "w") as fh:
+            fh.write(self.dumps())
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "EventTrace":
+        with open(path) as fh:
+            return cls.from_json(json.load(fh))
 
     # ---- Chrome trace-event export -----------------------------------------
 

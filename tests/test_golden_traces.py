@@ -1,0 +1,132 @@
+"""Golden-trace regression suite (tests/golden/).
+
+Each corpus entry is one fully seeded scenario recorded by
+``python -m repro.runtime.record_golden``: parameters, allocation,
+responses/misses, and the complete scheduler event trace.  Replaying the
+scenario must reproduce every recorded observable *exactly* — event by
+event, float by float — so any drift in arbitration order, RNG call
+order, duration sampling, or trace emission fails here with the first
+divergent event (not a bare assert).
+
+On divergence the replayed trace is exported as a Chrome trace JSON under
+``$GOLDEN_ARTIFACT_DIR`` (default ``test-artifacts/golden/``); CI uploads
+that directory as an artifact, so a failing run is one download away from
+a chrome://tracing side-by-side.
+
+Regenerating the corpus is deliberate: re-run the recorder CLI and review
+the diff (see README "Golden traces & regression corpus").
+"""
+import json
+import os
+from pathlib import Path
+
+import pytest
+
+from repro.core import GOLDEN_SCENARIOS, golden_scenario
+from repro.runtime.record_golden import (
+    GOLDEN_FORMAT,
+    preset_params,
+    record_scenario,
+)
+from repro.sched import EventTrace
+
+GOLDEN_DIR = Path(__file__).parent / "golden"
+GOLDEN_FILES = sorted(GOLDEN_DIR.glob("*.json"))
+
+#: regimes the corpus must span (ISSUE acceptance: ≥6 scenarios covering
+#: steady, churn, bus-saturated, and near-critical utilization)
+REQUIRED_SCENARIOS = (
+    "steady",
+    "steady_worst_case",
+    "near_critical",
+    "bus_saturated",
+    "churn_steady",
+    "churn_heavy",
+    "churn_worst_case",
+)
+
+
+def _artifact_dir() -> Path:
+    out = Path(os.environ.get(
+        "GOLDEN_ARTIFACT_DIR",
+        str(Path(__file__).parent.parent / "test-artifacts" / "golden"),
+    ))
+    out.mkdir(parents=True, exist_ok=True)
+    return out
+
+
+def _fail_with_event_diff(name: str, stored: dict, replayed: dict) -> None:
+    """Export the divergent Chrome trace, fail with a first-event diff."""
+    stored_tr = EventTrace.from_json(stored["trace"])
+    replay_tr = EventTrace.from_json(replayed["trace"])
+    artifact = _artifact_dir() / f"{name}.replayed.chrome.json"
+    replay_tr.dump(str(artifact))
+    div = stored_tr.diff(replay_tr)
+    if div is not None:
+        idx, want, got = div
+        pytest.fail(
+            f"golden scenario {name!r} diverged at event {idx}/"
+            f"{len(stored_tr.events)}:\n"
+            f"  golden:   {want.as_dict() if want else '<end of trace>'}\n"
+            f"  replayed: {got.as_dict() if got else '<end of trace>'}\n"
+            f"replayed Chrome trace exported to {artifact}"
+        )
+    # traces agree — the divergence is in result/alloc bookkeeping
+    keys = sorted(
+        k for k in set(stored) | set(replayed)
+        if stored.get(k) != replayed.get(k)
+    )
+    pytest.fail(
+        f"golden scenario {name!r}: traces identical but fields {keys} "
+        f"diverged (replayed Chrome trace at {artifact})"
+    )
+
+
+class TestCorpus:
+    def test_corpus_exists_and_spans_required_regimes(self):
+        names = {p.stem for p in GOLDEN_FILES}
+        assert len(names) >= 6, "corpus must hold at least six scenarios"
+        missing = set(REQUIRED_SCENARIOS) - names
+        assert not missing, f"corpus missing required regimes: {missing}"
+        # every registered preset must be recorded — a preset added (or a
+        # golden file deleted) without running the recorder is a gap in
+        # regression coverage, not a smaller corpus
+        unrecorded = {p.name for p in GOLDEN_SCENARIOS} - names
+        assert not unrecorded, (
+            f"presets registered but never recorded: {sorted(unrecorded)}; "
+            f"run `python -m repro.runtime.record_golden`"
+        )
+
+    def test_every_file_has_a_registered_preset(self):
+        """Every golden file must map back to a ScenarioPreset and carry
+        that preset's parameters — otherwise it silently tests nothing."""
+        registered = {p.name for p in GOLDEN_SCENARIOS}
+        for path in GOLDEN_FILES:
+            doc = json.loads(path.read_text())
+            assert doc["scenario"] == path.stem
+            assert doc["format"] == GOLDEN_FORMAT
+            assert path.stem in registered, (
+                f"{path.name} has no ScenarioPreset; delete it or register "
+                f"the preset in repro.core.generator.GOLDEN_SCENARIOS"
+            )
+            preset = golden_scenario(path.stem)
+            assert doc["params"] == preset_params(preset), (
+                f"{path.name} was recorded under different preset "
+                f"parameters; re-record it deliberately via "
+                f"`python -m repro.runtime.record_golden --only {path.stem}`"
+            )
+
+
+@pytest.mark.parametrize(
+    "path", GOLDEN_FILES, ids=[p.stem for p in GOLDEN_FILES]
+)
+def test_golden_scenario_replays_identically(path):
+    stored = json.loads(path.read_text())
+    replayed = record_scenario(golden_scenario(path.stem))
+    # normalize through JSON so tuples/lists and float text agree, and
+    # drop the cosmetic description (rewording it is not a divergence)
+    replayed = json.loads(json.dumps(replayed))
+    stored.pop("description", None)
+    replayed.pop("description", None)
+    if stored != replayed:
+        _fail_with_event_diff(path.stem, stored, replayed)

@@ -1,0 +1,166 @@
+"""Hypothesis property tests for the analysis layer.
+
+Structural guarantees the RTGPU analysis must satisfy for *any* task set,
+not just the seeds the example tests happen to draw:
+
+  * response bounds are monotone non-decreasing in segment WCETs
+    (interference workloads and base terms only grow — Lemmas 5.2–5.5
+    fixed points can never shrink when any execution bound grows);
+  * a task's own response bound is non-increasing in its own GN
+    allocation (more dedicated virtual SMs — Lemma 5.1 — never hurt,
+    holding the higher-priority prefix fixed);
+  * admission verdicts are deterministic: identical controllers fed
+    identical sequences decide identically, and a rejected admit retried
+    on the *same* controller returns the identical decision (the
+    transactional-rejection contract).
+
+Each property is phrased as a plain ``_check_*`` helper so it can also be
+driven directly (without hypothesis) for debugging a failing example.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import GeneratorConfig, TaskSet, generate_taskset
+from repro.core.rta import RtgpuIncremental
+from repro.sched import DynamicController
+
+_TOL = 1e-9
+
+
+def _taskset(seed: int, util: float, n: int = 4, m: int = 3) -> TaskSet:
+    rng = np.random.default_rng(seed)
+    return generate_taskset(
+        rng, util, GeneratorConfig(n_tasks=n, n_subtasks=m, variability=0.2)
+    )
+
+
+def _inflate(task, scale: float):
+    """Scale every WCET (upper bound) of ``task`` by ``scale`` >= 1,
+    keeping lower bounds, deadline, and period fixed."""
+    return dataclasses.replace(
+        task,
+        cpu_hi=tuple(c * scale for c in task.cpu_hi),
+        mem_hi=tuple(c * scale for c in task.mem_hi),
+        gpu=tuple(
+            dataclasses.replace(g, work_hi=g.work_hi * scale)
+            for g in task.gpu
+        ),
+    )
+
+
+def _responses(ts: TaskSet, alloc: list, tightened: bool) -> list:
+    inc = RtgpuIncremental(ts, tightened=tightened)
+    return [inc.analyze_task(k, alloc[: k + 1]).response
+            for k in range(len(ts))]
+
+
+# ---- property 1: monotone in WCETs ------------------------------------------
+
+
+def _check_wcet_monotone(seed, util, victim, scale, tightened):
+    ts = _taskset(seed, util)
+    victim %= len(ts)
+    alloc = [2] * len(ts)
+    base = _responses(ts, alloc, tightened)
+    inflated = TaskSet(tuple(
+        _inflate(t, scale) if i == victim else t
+        for i, t in enumerate(ts)
+    ))
+    after = _responses(inflated, alloc, tightened)
+    # inflating task `victim` raises its own base terms, the interference
+    # it imposes on lower-priority tasks, AND the bus blocking it imposes
+    # on higher-priority ones — every response is non-decreasing
+    for k, (b, a) in enumerate(zip(base, after)):
+        assert a >= b - _TOL, (
+            f"task {k}: response shrank {b} -> {a} after inflating "
+            f"task {victim} by {scale}"
+        )
+
+
+@given(
+    seed=st.integers(0, 10_000),
+    util=st.floats(0.2, 0.7),
+    victim=st.integers(0, 3),
+    scale=st.floats(1.0, 1.6),
+    tightened=st.booleans(),
+)
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_response_monotone_in_segment_wcets(seed, util, victim, scale,
+                                            tightened):
+    _check_wcet_monotone(seed, util, victim, scale, tightened)
+
+
+# ---- property 2: non-increasing in own GN allocation ------------------------
+
+
+def _check_alloc_non_increasing(seed, util, k, g_lo, g_hi, tightened):
+    ts = _taskset(seed, util)
+    k %= len(ts)
+    g_lo, g_hi = min(g_lo, g_hi), max(g_lo, g_hi)
+    inc = RtgpuIncremental(ts, tightened=tightened)
+    prefix = [1] * k
+    r_small = inc.analyze_task(k, prefix + [g_lo]).response
+    r_big = inc.analyze_task(k, prefix + [g_hi]).response
+    assert r_big <= r_small + _TOL, (
+        f"task {k}: response grew {r_small} -> {r_big} when GN "
+        f"{g_lo} -> {g_hi}"
+    )
+
+
+@given(
+    seed=st.integers(0, 10_000),
+    util=st.floats(0.2, 0.8),
+    k=st.integers(0, 3),
+    g_lo=st.integers(1, 8),
+    g_hi=st.integers(1, 8),
+    tightened=st.booleans(),
+)
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_response_non_increasing_in_own_allocation(seed, util, k, g_lo,
+                                                   g_hi, tightened):
+    _check_alloc_non_increasing(seed, util, k, g_lo, g_hi, tightened)
+
+
+# ---- property 3: deterministic admission verdicts ---------------------------
+
+
+def _decision_key(dec):
+    return (dec.admitted, dec.path, dec.reason, dec.tried, dec.alloc,
+            dec.bounds)
+
+
+def _check_admission_deterministic(seed, util, gn_total):
+    tasks = list(_taskset(seed, util, n=5))
+    c1 = DynamicController(gn_total)
+    c2 = DynamicController(gn_total)
+    for t in tasks:
+        d1, d2 = c1.admit(t), c2.admit(t)
+        assert _decision_key(d1) == _decision_key(d2), (
+            f"divergent verdicts for {t.name}: {d1} vs {d2}"
+        )
+    assert c1.allocation == c2.allocation
+    assert c1.bounds() == c2.bounds()
+    # a rejected admit retried on the same controller is byte-identical
+    # (rejection left no state behind to change the second verdict)
+    rejected = [t for t in tasks if t.name not in c1.allocation]
+    for t in rejected:
+        assert _decision_key(c1.admit(t)) == _decision_key(c2.admit(t))
+
+
+@given(
+    seed=st.integers(0, 10_000),
+    util=st.floats(0.3, 1.2),
+    gn_total=st.integers(2, 8),
+)
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_admission_verdicts_deterministic(seed, util, gn_total):
+    _check_admission_deterministic(seed, util, gn_total)

@@ -237,6 +237,42 @@ class TestTelemetry:
         with open(path) as fh:
             assert json.load(fh)["traceEvents"]
 
+    def test_json_round_trip_is_stable(self, tmp_path):
+        """dump → load → dump byte-stability, plus verbatim event recovery
+        (including nested-dict meta like the controller's realloc target)."""
+        trace = EventTrace(us_per_unit=1000.0, label="rt")
+        trace.record(0.0, "admit", "a", gn=3, path="pinned", bound=12.5)
+        trace.record(0.25, "release", "a", deadline=10.25)
+        trace.record(1.0, "realloc", "a", target={"a": 3, "b": 1})
+        trace.record(4.75, "complete", "a", response=4.5)
+        trace.record(5.0, "miss", "b", overshoot=0.125)
+        first = trace.dumps()
+        loaded = EventTrace.loads(first)
+        assert loaded.dumps() == first
+        assert loaded.events == trace.events
+        assert loaded.us_per_unit == trace.us_per_unit
+        assert loaded.label == trace.label
+        assert trace.diff(loaded) is None
+        # file round-trip too
+        path = trace.save(str(tmp_path / "events.json"))
+        again = EventTrace.load(path)
+        assert again.dumps() == first
+
+    def test_diff_reports_first_divergence(self):
+        a = EventTrace()
+        b = EventTrace()
+        a.record(0.0, "release", "x", deadline=5.0)
+        b.record(0.0, "release", "x", deadline=5.0)
+        a.record(1.0, "complete", "x", response=1.0)
+        b.record(1.0, "complete", "x", response=2.0)
+        idx, ours, theirs = a.diff(b)
+        assert idx == 1
+        assert ours.meta != theirs.meta
+        b.events[1] = a.events[1]
+        b.record(2.0, "release", "x", deadline=7.0)
+        idx, ours, theirs = a.diff(b)
+        assert idx == 2 and ours is None and theirs is not None
+
     def test_controller_events_traced(self):
         trace = EventTrace()
         c = DynamicController(gn_total=6, trace=trace)
