@@ -40,6 +40,7 @@ def main(argv=None) -> int:
         fig6_interleave,
         fig12_system_validation,
         roofline_table,
+        rta_throughput,
         sched_acceptance,
     )
 
@@ -51,6 +52,7 @@ def main(argv=None) -> int:
     stage("fig11", sched_acceptance.fig11, n_sets, rows)
     stage("fig12", fig12_system_validation.run, max(4, n_sets // 2), rows=rows)
     stage("churn", churn_acceptance.run, rows)
+    stage("rta", rta_throughput.run, rows)
     stage("roofline", roofline_table.run, rows)
     stage("roofline_multipod", roofline_table.run, rows, mesh="2x16x16")
 

@@ -44,8 +44,14 @@ def acceptance(
     seed: int = 0,
     max_candidates: int = 300,
     methods: Sequence[str] = tuple(METHODS),
+    engine: str = "frontier",
 ) -> dict:
-    """acceptance[method][u] = accepted fraction."""
+    """acceptance[method][u] = accepted fraction.
+
+    The RTGPU methods run on the batched frontier engine by default
+    (result-identical to the scalar DFS; see benchmarks/rta_throughput.py
+    for the measured speedup) — pass ``engine="dfs"`` for the scalar
+    reference path."""
     out: dict = {m: {} for m in methods}
     for u in utils:
         acc = {m: 0 for m in methods}
@@ -55,7 +61,7 @@ def acceptance(
             for m in methods:
                 mode = "grid" if m.startswith("rtgpu") else "greedy+grid"
                 r = schedule(ts, gn_total, analyzer=METHODS[m], mode=mode,
-                             max_candidates=max_candidates)
+                             max_candidates=max_candidates, engine=engine)
                 acc[m] += int(r.schedulable)
         for m in methods:
             out[m][u] = acc[m] / n_sets

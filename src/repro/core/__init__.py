@@ -6,10 +6,11 @@ Layers (bottom-up):
                  (Lemmas 2.1 / 5.2 / 5.4) via generic resource views
   rta.py         fixed-point response-time analysis + Theorem 5.6
   federated.py   Algorithm 2 grid search / greedy allocation
+  rta_batch.py   frontier-batched vectorized analysis (fast path)
+  backend.py     numpy/jax backend selection for rta_batch
   baselines.py   STGM busy-waiting and self-suspension baselines
   generator.py   Table 1 synthetic taskset generation
   interleave.py  virtual-SM model, Fig. 6 ratios, Eqs. 9-10
-  jax_rta.py     vmapped JAX batch schedulability (fast path)
 """
 from .task import GpuSegment, RTTask, SegmentKind, TaskSet, gpu_response_bounds
 from .workload import (
@@ -32,10 +33,13 @@ from .federated import (
     FederatedResult,
     greedy_search,
     grid_search,
+    grid_search_dfs,
     iter_allocations,
     min_viable_alloc,
     schedule,
 )
+from .rta_batch import BatchAnalyzer, grid_search_frontier
+from .backend import available_backends, get_backend, set_backend
 from .baselines import analyze_self_suspension, analyze_stgm
 from .generator import (
     GOLDEN_SCENARIOS,
@@ -76,6 +80,12 @@ __all__ = [
     "fixed_point",
     "FederatedResult",
     "grid_search",
+    "grid_search_dfs",
+    "grid_search_frontier",
+    "BatchAnalyzer",
+    "available_backends",
+    "get_backend",
+    "set_backend",
     "greedy_search",
     "schedule",
     "iter_allocations",

@@ -12,6 +12,13 @@ Two entry points:
     (GPU segments are dedicated; bus/CPU interference comes from
     higher-priority tasks; bus blocking uses lower-priority ML̂ only,
     which is allocation-independent).
+
+This module is the *scalar reference oracle*: every recurrence is evaluated
+one candidate at a time in plain Python, exactly as printed in the paper.
+``repro.core.rta_batch`` evaluates the same Lemma 5.3/5.5 fixed points for
+whole frontiers of candidate allocations at once over the staircase arrays
+exported by :meth:`repro.core.workload.ViewTables.as_arrays`; its results
+are asserted identical to this path (tests/test_rta_batch.py).
 """
 from __future__ import annotations
 
@@ -24,6 +31,7 @@ from .workload import ViewTables, cpu_view, mem_view
 
 __all__ = [
     "fixed_point",
+    "bus_blocking",
     "TaskAnalysis",
     "SetAnalysis",
     "AnalysisTables",
@@ -34,6 +42,22 @@ __all__ = [
 
 _INF = math.inf
 _EPS = 1e-9
+
+
+def bus_blocking(tasks: Sequence[RTTask]) -> list[float]:
+    """Non-preemptive bus blocking per priority level (Lemma 5.3's B term).
+
+    ``out[k]`` is the longest memory copy of any *lower-priority* task —
+    a suffix maximum, computed in one O(n) reverse pass (allocation-free).
+    """
+    n = len(tasks)
+    out = [0.0] * n
+    acc = 0.0
+    for k in range(n - 1, -1, -1):
+        out[k] = acc
+        if tasks[k].n_mem:
+            acc = max(acc, max(tasks[k].mem_hi))
+    return out
 
 
 def fixed_point(
@@ -169,15 +193,8 @@ class RtgpuIncremental:
     ):
         self.taskset = taskset
         self.tightened = tightened
-        n = len(taskset)
         # Bus blocking for task k: longest lower-priority copy (alloc-free).
-        self._blocking = []
-        for k in range(n):
-            b = 0.0
-            for i in range(k + 1, n):
-                if taskset[i].n_mem:
-                    b = max(b, max(taskset[i].mem_hi))
-            self._blocking.append(b)
+        self._blocking = bus_blocking(taskset.tasks)
         # Views are keyed by the (frozen, hashable) task itself so an external
         # AnalysisTables can be shared across task sets and priority orders.
         self._tables = tables if tables is not None else AnalysisTables()

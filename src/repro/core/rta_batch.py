@@ -1,0 +1,919 @@
+"""Frontier-batched vectorized RTGPU schedulability analysis.
+
+The scalar path (``repro.core.rta``) evaluates one candidate allocation at
+a time: every Lemma 5.3/5.5 fixed point is a Python closure over
+``ViewTables.max_workload``.  Admission cost therefore scales linearly with
+candidates tried — the dominant cost of ``DynamicController.admit`` and of
+acceptance-ratio sweeps.
+
+This module evaluates the same recurrences for an entire **frontier of
+candidate allocation prefixes at once**:
+
+  * each ``ResourceView`` staircase is compiled to flat ``(K, P)`` arrays
+    (:meth:`repro.core.workload.ViewTables.as_arrays`) — ``W^h(t)`` for a
+    vector of windows is one ``searchsorted`` per row;
+  * the Lemma 5.3 (bus) / Lemma 5.5 (CPU) / Theorem 5.6 fixed points run
+    in lockstep over all candidates, freezing entries as they converge;
+  * :func:`grid_search_frontier` replaces the node-at-a-time DFS with a
+    breadth-wise search: expand all surviving prefixes at depth k, analyze
+    them in ONE batched call, prune, descend.  Candidates are kept in the
+    paper's lexicographic order (hint order when warm-started), so the
+    first full-depth success is the *same allocation* the DFS returns.
+
+Exactness contract: on the NumPy backend every sum is accumulated in the
+same order as the scalar path, so verdicts, allocations and R̂ values are
+bit-identical (tests/test_rta_batch.py asserts this; the optional JAX
+backend — see ``repro.core.backend`` — is held to 1e-9).
+
+One batching dividend the scalar DFS cannot exploit: siblings (children of
+one frontier prefix) share all higher-priority interference, so the per-
+copy bus/CPU fixed points are computed once per *parent* and only the
+Theorem 5.6 combination (which depends on the candidate's own GN) runs per
+*child*.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .backend import get_backend
+from .rta import RtgpuIncremental, SetAnalysis, TaskAnalysis, AnalysisTables
+from .task import TaskSet
+from .workload import ViewTables, workload_fn
+
+__all__ = ["BatchAnalyzer", "DepthAnalysis", "grid_search_frontier"]
+
+_INF = math.inf
+_EPS = 1e-9          # fixed-point convergence tolerance (matches rta._EPS)
+_MAX_ITERS = 10_000  # matches rta.fixed_point
+_FINAL_CHUNK = 2048  # final-depth candidates analyzed per early-exit chunk
+_HYBRID_TABLE_LIMIT = 50_000  # pairs-rows x windows above which per-variant eval wins
+
+
+# ---- staircase evaluation ---------------------------------------------------
+
+
+def _eval_staircase(vt: ViewTables, t: np.ndarray, arr=None) -> np.ndarray:
+    """``max_h W^h(t)`` for a vector of windows — exact scalar-path match.
+
+    Duplicate windows (ubiquitous once a batch of fixed points starts
+    converging) are collapsed before touching the arrays.
+    """
+    if arr is None:
+        arr = vt.as_arrays()
+    if t.size > 16:
+        tu, inv = np.unique(t, return_inverse=True)
+    else:
+        tu, inv = t, None
+    out = np.zeros_like(tu)
+    pos = tu > 0.0
+    far = pos & (tu >= arr.min_horizon)
+    near = pos & ~far
+    if near.any():
+        tm = tu[near]
+        cum_ls = arr.cum_ls
+        k, p = cum_ls.shape
+        nfull = np.empty((k, tm.size), dtype=np.int64)
+        for h in range(k):
+            nfull[h] = cum_ls[h].searchsorted(tm, side="right")
+        rowoff = np.arange(k)[:, None] * p
+        at = rowoff + nfull
+        have = nfull > 0
+        idx = at - have  # == rowoff + (nfull-1 if have else nfull==0)
+        consumed = np.where(have, cum_ls.ravel()[idx], 0.0)
+        work = np.where(have, arr.cum_l.ravel()[idx], 0.0)
+        partial = np.minimum(arr.length.ravel()[at], tm[None, :] - consumed)
+        work = work + np.maximum(partial, 0.0)
+        out[near] = work.max(axis=0)
+    if far.any():
+        # Beyond the precomputed horizon — only degenerate views whose rows
+        # hit the position cap before covering it: defer to the scalar path.
+        view = vt.view
+        out[far] = [
+            max(workload_fn(view, h, float(tv)) for h in range(view.k))
+            for tv in tu[far]
+        ]
+    return out if inv is None else out[inv]
+
+
+@dataclasses.dataclass
+class _HpGroup:
+    """One higher-priority view position: its tables per GN, and each
+    candidate's GN at that position."""
+
+    vt_by_gn: dict[int, ViewTables]
+    gn_col: np.ndarray  # (B,) int
+
+
+# ---- backends ---------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _PartStack:
+    """All (view, GN) pairs of one interference part, stacked row-wise.
+
+    ``G`` pairs contribute ``R`` staircase rows total, right-padded to a
+    common ``P`` with ``cum_ls=inf`` / ``length=0`` sentinels that can
+    never be counted as full positions.  One fused evaluation answers
+    every pair at every unique window of an iteration.
+    """
+
+    cum_ls: np.ndarray       # (R, P)
+    cum_l: np.ndarray        # (R, P)
+    length: np.ndarray       # (R, P)
+    pair_starts: np.ndarray  # (G,) first row of each pair
+    minh: np.ndarray         # (G,) per-pair precomputed horizon
+    refs: list               # (vt, arr) per pair — keeps ids stable + far path
+
+    def eval(self, tu: np.ndarray) -> np.ndarray:
+        """Workloads ``W[g, i] = max_h W^h(tu[i])`` for every pair ``g``.
+
+        ``tu`` must be sorted unique (as produced by ``np.unique``); each
+        per-row position count is recovered from one bulk ``searchsorted``
+        against ``tu`` plus a bincount/cumsum, so cost is a handful of
+        array ops regardless of how many pairs or rows are stacked.
+        """
+        r, p = self.cum_ls.shape
+        n = tu.size
+        # q[r,p] = #{tu < cum_ls[r,p]};  then nfull[r,i] = #{p: q[r,p] <= i}
+        # reproduces bisect_right(cum_ls[r], tu[i]) with exact comparisons.
+        q = np.searchsorted(tu, self.cum_ls.ravel(), side="left")
+        np.minimum(q, n, out=q)
+        keys = q + np.repeat(np.arange(r) * (n + 1), p)
+        table = np.bincount(keys, minlength=r * (n + 1)).reshape(r, n + 1)
+        nfull = table.cumsum(axis=1)[:, :n]
+        np.minimum(nfull, p - 1, out=nfull)  # far rows get overwritten below
+        have = nfull > 0
+        rowoff = (np.arange(r) * p)[:, None]
+        idx = rowoff + nfull - have
+        consumed = np.where(have, self.cum_ls.ravel()[idx], 0.0)
+        work = np.where(have, self.cum_l.ravel()[idx], 0.0)
+        partial = np.minimum(
+            self.length.ravel()[rowoff + nfull], tu[None, :] - consumed
+        )
+        work = work + np.maximum(partial, 0.0)
+        out = np.maximum.reduceat(work, self.pair_starts, axis=0)
+        nonpos = tu <= 0.0
+        if nonpos.any():
+            out[:, nonpos] = 0.0
+        if tu[-1] >= self.minh.min():
+            # beyond a pair's precomputed horizon (degenerate views whose
+            # rows hit the position cap): defer to the scalar path
+            for g, mh in enumerate(self.minh):
+                far = ~nonpos & (tu >= mh)
+                if far.any():
+                    view = self.refs[g][0].view
+                    out[g, far] = [
+                        max(workload_fn(view, h, float(tv))
+                            for h in range(view.k))
+                        for tv in tu[far]
+                    ]
+        return out
+
+
+class _NumpyEngine:
+    """Lockstep batched fixed point; bit-identical to ``rta.fixed_point``.
+
+    Per iteration, each part's interference is answered by ONE fused
+    :meth:`_PartStack.eval` over the iteration's unique windows, then
+    scattered back per higher-priority position in priority order (the
+    exact association of the scalar closures).  The bulk of a batch
+    converges within a few vectorized sweeps; the few slow-converging
+    stragglers (iterates crawling toward the limit) are handed to a scalar
+    continuation — same update rule, same floats, but per-iteration cost
+    measured in dict lookups instead of array dispatch.
+    """
+
+    name = "numpy"
+
+    # below this many active entries, scalar iteration beats NumPy dispatch
+    _TAIL = 48
+    _STACK_CACHE_LIMIT = 256
+
+    def __init__(self) -> None:
+        self._stacks: dict[tuple, _PartStack] = {}
+
+    def _part_stack(self, groups, horizon: float) -> Optional[_PartStack]:
+        """Build (or fetch) the stacked arrays for one part's pair set."""
+        pairs: list[tuple] = []
+        for grp in groups:
+            for gval in sorted(grp.vt_by_gn):
+                vt = grp.vt_by_gn[gval]
+                pairs.append((vt, vt.as_arrays(horizon)))
+        if not pairs:
+            return None
+        key = tuple(id(arr) for _vt, arr in pairs)
+        st = self._stacks.get(key)
+        if st is not None:
+            return st
+        pmax = max(arr.cum_ls.shape[1] for _vt, arr in pairs)
+        starts, rows = [], 0
+        for _vt, arr in pairs:
+            starts.append(rows)
+            rows += arr.cum_ls.shape[0]
+        cum_ls = np.full((rows, pmax), _INF)
+        cum_l = np.zeros((rows, pmax))
+        length = np.zeros((rows, pmax))
+        for (start, (_vt, arr)) in zip(starts, pairs):
+            k, p = arr.cum_ls.shape
+            cum_ls[start:start + k, :p] = arr.cum_ls
+            cum_l[start:start + k, :p] = arr.cum_l
+            length[start:start + k, :p] = arr.length
+        st = _PartStack(
+            cum_ls=cum_ls,
+            cum_l=cum_l,
+            length=length,
+            pair_starts=np.asarray(starts, dtype=np.int64),
+            minh=np.array([arr.min_horizon for _vt, arr in pairs]),
+            refs=pairs,
+        )
+        if len(self._stacks) >= self._STACK_CACHE_LIMIT:
+            # Engine-global cache: it also pins the referenced ViewTables /
+            # arrays of departed task sets, so evict the oldest half
+            # (insertion order) rather than growing until process exit.
+            for old in list(self._stacks)[: self._STACK_CACHE_LIMIT // 2]:
+                del self._stacks[old]
+        self._stacks[key] = st
+        return st
+
+    def fixed_point_batch(
+        self,
+        base: np.ndarray,          # (B, J)
+        limit: float,
+        parts: Sequence[Sequence[_HpGroup]],
+        const: float,
+        horizon: float = 0.0,
+    ) -> np.ndarray:
+        B, J = base.shape
+        if B == 0 or J == 0:
+            return np.zeros((B, J))
+        # Per-call precomputation: one stacked array set per part, plus each
+        # group's candidate-row -> pair-index column and per-variant masks.
+        prep = []
+        for groups in parts:
+            st = self._part_stack(groups, horizon)
+            cols = []
+            pair_base = 0
+            for grp in groups:
+                uniq = np.array(sorted(grp.vt_by_gn), dtype=np.int64)
+                cols.append(pair_base + np.searchsorted(uniq, grp.gn_col))
+                pair_base += uniq.size
+            variants = [
+                [
+                    (vt, vt.as_arrays(horizon), grp.gn_col == gval)
+                    for gval, vt in sorted(grp.vt_by_gn.items())
+                ]
+                for grp in groups
+            ]
+            prep.append((st, cols, variants))
+        res = np.full((B, J), _INF)
+        active = base <= limit
+        x = base.copy()
+        for it in range(_MAX_ITERS):
+            bi, ji = np.nonzero(active)
+            if bi.size == 0:
+                break
+            if bi.size <= self._TAIL:
+                for b, j in zip(bi.tolist(), ji.tolist()):
+                    res[b, j] = self._scalar_tail(
+                        base[b, j], x[b, j], limit, parts, const, b,
+                        _MAX_ITERS - it, horizon,
+                    )
+                break
+            t = x[bi, ji]
+            tu = inv = None
+            # interference: per-part partial sums, each accumulated in
+            # priority order — the exact association of the scalar closures
+            acc = np.zeros_like(t)
+            for st, cols, variants in prep:
+                pacc = np.zeros_like(t)
+                if st is not None and (
+                    t.size * st.cum_ls.shape[0] <= _HYBRID_TABLE_LIMIT
+                ):
+                    # small batch: one fused counting-table evaluation of
+                    # every pair at every unique window
+                    if tu is None:
+                        tu, inv = np.unique(t, return_inverse=True)
+                    w = st.eval(tu)
+                    for col in cols:
+                        pacc += w[col[bi], inv]
+                else:
+                    # large batch: the R×n table outgrows the per-variant
+                    # overhead — evaluate each (view, GN) on its own subset
+                    for group in variants:
+                        if len(group) == 1:
+                            vt, arr, _ = group[0]
+                            pacc += _eval_staircase(vt, t, arr)
+                            continue
+                        for vt, arr, rowmask in group:
+                            sel = rowmask[bi]
+                            if sel.any():
+                                pacc[sel] += _eval_staircase(vt, t[sel], arr)
+                acc = acc + pacc
+            nx = base[bi, ji] + (acc + const)
+            over = nx > limit
+            conv = ~over & (nx <= t + _EPS)
+            res[bi[conv], ji[conv]] = nx[conv]
+            cont = ~(over | conv)
+            x[bi[cont], ji[cont]] = nx[cont]
+            done = over | conv
+            active[bi[done], ji[done]] = False
+        return res
+
+    @staticmethod
+    def _scalar_tail(
+        base_v: float,
+        x_v: float,
+        limit: float,
+        parts,
+        const: float,
+        row: int,
+        iters_left: int,
+        horizon: float,
+    ) -> float:
+        """Finish one entry's fixed point scalar-style from iterate ``x_v``.
+
+        Continues the exact lockstep trajectory (same update expression,
+        same association and float operations), so the result is
+        bit-identical to having kept iterating in vector form — or to
+        ``rta.fixed_point`` itself.  The iterate sequence is monotone
+        non-decreasing, so each view keeps a per-row position pointer that
+        only ever walks forward: one iteration costs O(rows) comparisons,
+        not O(rows·log positions) cached bisects.
+        """
+        walkers = []
+        for groups in parts:
+            ws = []
+            for grp in groups:
+                vt = grp.vt_by_gn[int(grp.gn_col[row])]
+                cls, cl, ln, minh = vt.as_lists(horizon)
+                if minh <= limit:
+                    # degenerate view (position cap) — generic slow path
+                    ws.append((None, None, None, vt))
+                else:
+                    ws.append((cls, cl, ln, [0] * len(cls)))
+            walkers.append(ws)
+        x = x_v
+        for _ in range(iters_left):
+            acc = 0.0
+            for ws in walkers:
+                pacc = 0.0
+                for cls, cl, ln, aux in ws:
+                    if cls is None:
+                        pacc += aux.max_workload(x)
+                        continue
+                    if x <= 0.0:
+                        continue
+                    best = 0.0
+                    for r in range(len(cls)):
+                        crow = cls[r]
+                        p = aux[r]
+                        while crow[p] <= x:
+                            p += 1
+                        aux[r] = p
+                        if p:
+                            consumed = crow[p - 1]
+                            work = cl[r][p - 1]
+                        else:
+                            consumed = 0.0
+                            work = 0.0
+                        partial = ln[r][p]
+                        gap = x - consumed
+                        if partial > gap:
+                            partial = gap
+                        if partial > 0.0:
+                            work += partial
+                        if work > best:
+                            best = work
+                    pacc += best
+                acc = acc + pacc
+            nx = base_v + (acc + const)
+            if nx > limit:
+                return _INF
+            if nx <= x + _EPS:
+                return nx
+            x = nx
+        return _INF
+
+
+class _JaxEngine:
+    """``jax.jit`` + ``vmap`` lockstep sweep over stacked staircase arrays.
+
+    Views are registered into a padded ``(V, Kmax, Pmax)`` stack; each
+    candidate row carries the registry ids of its higher-priority views and
+    the whole fixed point runs as one ``lax.while_loop``.  Falls back to
+    the NumPy engine for shapes JAX cannot help with (no interference, or
+    a degenerate view whose precomputed horizon does not cover ``limit``).
+    """
+
+    name = "jax"
+
+    def __init__(self) -> None:
+        import jax
+        import jax.numpy as jnp
+
+        if not jax.config.jax_enable_x64:
+            # backend.set_backend("jax") flips this; guard direct use.
+            jax.config.update("jax_enable_x64", True)
+        self._jax = jax
+        self._jnp = jnp
+        self._np_engine = _NumpyEngine()
+        self._index: dict[int, int] = {}   # id(ViewTables) -> registry slot
+        self._views: list[ViewTables] = []
+        self._stack = None                 # cached (cls, cl, ln) jnp arrays
+        self._fp = self._build_fp()
+
+    def _build_fp(self):
+        jax, jnp = self._jax, self._jnp
+
+        def w_row(cls_r, cl_r, ln_r, tv):
+            nf = jnp.searchsorted(cls_r, tv, side="right")
+            have = nf > 0
+            idx = jnp.where(have, nf - 1, 0)
+            consumed = jnp.where(have, cls_r[idx], 0.0)
+            work = jnp.where(have, cl_r[idx], 0.0)
+            partial = jnp.minimum(
+                ln_r[jnp.minimum(nf, ln_r.shape[0] - 1)], tv - consumed
+            )
+            return work + jnp.maximum(partial, 0.0)
+
+        w_view = jax.vmap(w_row, in_axes=(0, 0, 0, None))      # K rows
+
+        def view_max(cv, lv, nv, tv):
+            return jnp.where(tv > 0.0, jnp.max(w_view(cv, lv, nv, tv)), 0.0)
+
+        w_hp = jax.vmap(view_max, in_axes=(0, 0, 0, None))     # H views
+
+        def interf_one(cb, lb, nb, tv):
+            return jnp.sum(w_hp(cb, lb, nb, tv))
+
+        interf_bj = jax.vmap(                                  # B x J
+            jax.vmap(interf_one, in_axes=(None, None, None, 0)),
+            in_axes=(0, 0, 0, 0),
+        )
+
+        def fp(base, limit, cls, cl, ln, ids, const):
+            g_cls, g_cl, g_ln = cls[ids], cl[ids], ln[ids]     # (B,H,K,P)
+
+            def cond(s):
+                i, _, _, act = s
+                return jnp.logical_and(i < _MAX_ITERS, act.any())
+
+            def body(s):
+                i, x, res, act = s
+                t = jnp.where(act, x, 0.0)
+                acc = interf_bj(g_cls, g_cl, g_ln, t)
+                nx = base + (acc + const)
+                over = nx > limit
+                convd = jnp.logical_and(~over, nx <= x + _EPS)
+                res = jnp.where(jnp.logical_and(act, convd), nx, res)
+                done = jnp.logical_or(over, convd)
+                x = jnp.where(jnp.logical_and(act, ~done), nx, x)
+                act = jnp.logical_and(act, ~done)
+                return i + 1, x, res, act
+
+            res0 = jnp.full_like(base, jnp.inf)
+            act0 = base <= limit
+            _, _, res, _ = jax.lax.while_loop(cond, body, (0, base, res0, act0))
+            return res
+
+        return jax.jit(fp)
+
+    # Registry bound: a long-lived controller would otherwise accumulate a
+    # slot (and stacked rows) for every view it ever analyzed, and each
+    # growth re-pads the stack.  Clearing only costs re-registration; the
+    # check runs BEFORE a call registers its views so one call's set is
+    # never split across an eviction.
+    _REGISTRY_LIMIT = 512
+
+    def _trim_registry(self, incoming: int) -> None:
+        if len(self._views) + incoming > self._REGISTRY_LIMIT:
+            self._index.clear()
+            self._views.clear()
+            self._stack = None
+
+    def _register(self, arr) -> int:
+        # keyed by the StaircaseArrays build: a horizon regrowth makes a
+        # new arrays object and therefore a fresh registry slot
+        slot = self._index.get(id(arr))
+        if slot is None:
+            slot = len(self._views)
+            self._index[id(arr)] = slot
+            self._views.append(arr)
+            self._stack = None
+        return slot
+
+    def _stacked(self):
+        if self._stack is None:
+            jnp = self._jnp
+            arrays = self._views
+            kmax = max(a.cum_ls.shape[0] for a in arrays)
+            pmax = max(a.cum_ls.shape[1] for a in arrays)
+            v = len(arrays)
+            cls = np.full((v, kmax, pmax), _INF)
+            cl = np.zeros((v, kmax, pmax))
+            ln = np.zeros((v, kmax, pmax))
+            for s, a in enumerate(arrays):
+                k, p = a.cum_ls.shape
+                cls[s, :k, :p] = a.cum_ls
+                cl[s, :k, :p] = a.cum_l
+                # pad positions continue the final cumulative execution so a
+                # window that somehow lands there adds no phantom work
+                cl[s, :k, p:] = a.cum_l[:, -1:]
+                ln[s, :k, :p] = a.length
+            self._stack = (jnp.asarray(cls), jnp.asarray(cl), jnp.asarray(ln))
+        return self._stack
+
+    def fixed_point_batch(self, base, limit, parts, const, horizon=0.0):
+        B, J = base.shape
+        groups = [g for part in parts for g in part]
+        if B == 0 or J == 0 or not groups:
+            return self._np_engine.fixed_point_batch(
+                base, limit, parts, const, horizon
+            )
+        arrs = {
+            id(grp): {
+                int(gv): vt.as_arrays(horizon)
+                for gv, vt in grp.vt_by_gn.items()
+            }
+            for grp in groups
+        }
+        if any(
+            a.min_horizon <= limit
+            for by_gn in arrs.values() for a in by_gn.values()
+        ):
+            # precomputed horizon cannot cover every query window
+            return self._np_engine.fixed_point_batch(
+                base, limit, parts, const, horizon
+            )
+        incoming = [a for by_gn in arrs.values() for a in by_gn.values()]
+        self._trim_registry(
+            sum(1 for a in incoming if id(a) not in self._index)
+        )
+        for a in incoming:
+            self._register(a)
+        ids = np.stack(
+            [
+                np.array(
+                    [self._index[id(arrs[id(grp)][int(gv)])]
+                     for gv in grp.gn_col],
+                    dtype=np.int32,
+                )
+                for grp in groups
+            ],
+            axis=1,
+        )
+        cls, cl, ln = self._stacked()
+        bp = 1 << max(0, int(B - 1).bit_length())  # pad B to a power of two
+        base_p = np.full((bp, J), limit + 1.0)
+        base_p[:B] = base
+        ids_p = np.zeros((bp, ids.shape[1]), np.int32)
+        ids_p[:B] = ids
+        jnp = self._jnp
+        res = self._fp(
+            jnp.asarray(base_p), limit, cls, cl, ln, jnp.asarray(ids_p), const
+        )
+        return np.asarray(res)[:B]
+
+
+_ENGINES: dict[str, object] = {}
+
+
+def _engine(name: Optional[str] = None):
+    name = name or get_backend()
+    if name not in ("numpy", "jax"):
+        raise ValueError(f"unknown RTA backend {name!r}")
+    if name not in _ENGINES:
+        _ENGINES[name] = _NumpyEngine() if name == "numpy" else _JaxEngine()
+    return _ENGINES[name]
+
+
+# ---- batched per-depth analysis ---------------------------------------------
+
+
+def _seq_sum(mat: np.ndarray) -> np.ndarray:
+    """Row sums accumulated column-by-column (matches Python ``sum``)."""
+    acc = np.zeros(mat.shape[0])
+    for j in range(mat.shape[1]):
+        acc = acc + mat[:, j]
+    return acc
+
+
+@dataclasses.dataclass
+class DepthAnalysis:
+    """Batched analysis of task ``k`` for a frontier of candidates.
+
+    Children (one per candidate) index their shared interference context
+    through ``parent``: ``mem_resp``/``cpu_resp`` are *per parent prefix*
+    (they do not depend on the candidate's own GN), ``r1``/``r2`` per
+    child."""
+
+    k: int
+    name: str
+    deadline: float
+    g: np.ndarray          # (Bc,) candidate's own GN
+    parent: np.ndarray     # (Bc,) -> row of mem_resp / cpu_resp
+    mem_resp: np.ndarray   # (Bp, n_mem)
+    cpu_resp: np.ndarray   # (Bp, m)
+    r1: np.ndarray         # (Bc,)
+    r2: np.ndarray         # (Bc,)
+    gpu_bounds: dict[int, tuple[tuple[float, ...], tuple[float, ...]]]
+
+    @property
+    def response(self) -> np.ndarray:
+        return np.minimum(self.r1, self.r2)
+
+    @property
+    def schedulable(self) -> np.ndarray:
+        return self.response <= self.deadline + 1e-6
+
+    def task_analysis(self, i: int) -> TaskAnalysis:
+        """Materialize the scalar-path :class:`TaskAnalysis` for child i."""
+        p = int(self.parent[i])
+        g = int(self.g[i])
+        lo, hi = self.gpu_bounds[g]
+        return TaskAnalysis(
+            name=self.name,
+            n_vsm=2 * g,
+            gpu_resp_lo=lo,
+            gpu_resp_hi=hi,
+            mem_resp_hi=tuple(float(v) for v in self.mem_resp[p]),
+            cpu_resp_hi=tuple(float(v) for v in self.cpu_resp[p]),
+            r1=float(self.r1[i]),
+            r2=float(self.r2[i]),
+            deadline=self.deadline,
+        )
+
+
+class BatchAnalyzer:
+    """Vectorized counterpart of :class:`repro.core.rta.RtgpuIncremental`.
+
+    Shares the same ``AnalysisTables`` view cache (and therefore the same
+    compiled staircases) as the scalar path, so warm controllers hand their
+    tables straight in.  ``backend`` overrides ``repro.core.backend``'s
+    process-wide selection for this analyzer only.
+    """
+
+    def __init__(
+        self,
+        taskset: TaskSet,
+        tightened: bool = False,
+        tables: Optional[AnalysisTables] = None,
+        backend: Optional[str] = None,
+    ):
+        self.taskset = taskset
+        self.tightened = tightened
+        self._inc = RtgpuIncremental(taskset, tightened=tightened,
+                                     tables=tables)
+        self._engine = _engine(backend)
+        self._gpu_cache: dict[tuple[int, int], tuple] = {}
+        # Largest window any fixed point in this task set can query: its
+        # own limit is its deadline, so staircase arrays compiled to the
+        # max deadline answer every lookup without the scalar fallback.
+        self._horizon = max(t.deadline for t in taskset)
+
+    @property
+    def scalar(self) -> RtgpuIncremental:
+        """The underlying scalar analyzer (reference oracle, shared views)."""
+        return self._inc
+
+    def _gpu(self, k: int, g: int) -> tuple:
+        """(gpu_resp_lo, gpu_resp_hi, Σ gpu_resp_hi) for task k at GN g."""
+        key = (k, g)
+        got = self._gpu_cache.get(key)
+        if got is None:
+            bounds = [seg.response_bounds(2 * g) for seg in self.taskset[k].gpu]
+            lo = tuple(b[0] for b in bounds)
+            hi = tuple(b[1] for b in bounds)
+            got = (lo, hi, sum(hi))
+            self._gpu_cache[key] = got
+        return got
+
+    def _groups(
+        self, k: int, kind: str, parent_prefixes: np.ndarray
+    ) -> list[_HpGroup]:
+        ts = self.taskset
+        groups: list[_HpGroup] = []
+        for i in range(k):
+            if kind == "mem" and not ts[i].n_mem:
+                continue
+            col = parent_prefixes[:, i]
+            fetch = self._inc.mem_tables if kind == "mem" else self._inc.cpu_tables
+            vt_by_gn = {int(g): fetch(i, int(g)) for g in np.unique(col)}
+            groups.append(_HpGroup(vt_by_gn=vt_by_gn, gn_col=col))
+        return groups
+
+    def analyze_depth(
+        self,
+        k: int,
+        parent_prefixes: np.ndarray,  # (Bp, k) GN for tasks 0..k-1
+        g: np.ndarray,                # (Bc,) candidate GN for task k
+        parent: np.ndarray,           # (Bc,) -> parent prefix row
+    ) -> DepthAnalysis:
+        """Analyze task k for every candidate ``(parent prefix, own GN)``."""
+        task = self.taskset[k]
+        limit = task.deadline
+        blocking = self._inc._blocking[k]
+        bp = parent_prefixes.shape[0]
+        bc = g.shape[0]
+
+        mem_groups = self._groups(k, "mem", parent_prefixes)
+        cpu_groups = self._groups(k, "cpu", parent_prefixes)
+
+        # Lemma 5.3 / 5.5 fixed points: per *parent* (own GN not involved)
+        mem_resp = self._engine.fixed_point_batch(
+            np.tile(np.asarray(task.mem_hi, dtype=np.float64), (bp, 1)),
+            limit, [mem_groups], blocking, self._horizon,
+        )
+        cpu_resp = self._engine.fixed_point_batch(
+            np.tile(np.asarray(task.cpu_hi, dtype=np.float64), (bp, 1)),
+            limit, [cpu_groups], 0.0, self._horizon,
+        )
+        mem_sum = _seq_sum(mem_resp)
+        cpu_sum = _seq_sum(cpu_resp)
+        mem_bad = np.isinf(mem_resp).any(axis=1)
+        cpu_bad = np.isinf(cpu_resp).any(axis=1)
+
+        # Theorem 5.6 combination: per *child* (own GN enters via Lemma 5.1)
+        uniq_g, inv = np.unique(g, return_inverse=True)
+        gpu_sum = np.array([self._gpu(k, int(gv))[2] for gv in uniq_g])[inv]
+
+        r1 = (gpu_sum + mem_sum[parent]) + cpu_sum[parent]
+        r1[(mem_bad | cpu_bad)[parent]] = _INF
+
+        ctot = task.cpu_total_hi()
+        base2 = (gpu_sum + mem_sum[parent]) + ctot
+        base2[mem_bad[parent]] = _INF
+        child_cpu = [
+            _HpGroup(grp.vt_by_gn, grp.gn_col[parent]) for grp in cpu_groups
+        ]
+        r2 = self._engine.fixed_point_batch(
+            base2[:, None], limit, [child_cpu], 0.0, self._horizon
+        )[:, 0]
+
+        if self.tightened:
+            base3 = ((gpu_sum + task.mem_total_hi()) + ctot) \
+                + task.n_mem * blocking
+            child_mem = [
+                _HpGroup(grp.vt_by_gn, grp.gn_col[parent])
+                for grp in mem_groups
+            ]
+            r3 = self._engine.fixed_point_batch(
+                base3[:, None], limit, [child_mem, child_cpu], 0.0,
+                self._horizon,
+            )[:, 0]
+            r2 = np.minimum(r2, r3)
+
+        return DepthAnalysis(
+            k=k,
+            name=task.name or f"task{k}",
+            deadline=limit,
+            g=np.asarray(g),
+            parent=np.asarray(parent),
+            mem_resp=mem_resp,
+            cpu_resp=cpu_resp,
+            r1=r1,
+            r2=r2,
+            gpu_bounds={
+                int(gv): self._gpu(k, int(gv))[:2] for gv in uniq_g
+            },
+        )
+
+    def analyze_prefixes(
+        self, k: int, prefixes: np.ndarray, dedupe: bool = True
+    ) -> DepthAnalysis:
+        """Analyze task k for explicit ``(B, k+1)`` allocation prefixes.
+
+        With ``dedupe`` the shared higher-priority contexts are collapsed,
+        so e.g. a pinned 1-D admission sweep (candidates differing only in
+        the arrival's GN) pays for each distinct interference prefix once.
+        """
+        prefixes = np.asarray(prefixes, dtype=np.int64)
+        if prefixes.ndim != 2 or prefixes.shape[1] != k + 1:
+            raise ValueError(f"need a (B, {k + 1}) prefix matrix")
+        parents_full = prefixes[:, :k]
+        g = prefixes[:, k]
+        if dedupe and parents_full.shape[0] > 1:
+            uniq, inv = np.unique(parents_full, axis=0, return_inverse=True)
+            return self.analyze_depth(k, uniq, g, inv.ravel())
+        return self.analyze_depth(
+            k, parents_full, g, np.arange(prefixes.shape[0])
+        )
+
+
+# ---- frontier grid search ---------------------------------------------------
+
+
+def grid_search_frontier(
+    taskset: TaskSet,
+    gn_total: int,
+    tightened: bool = False,
+    max_nodes: int = 1_000_000,
+    hint: Optional[Sequence[Optional[int]]] = None,
+    tables: Optional[AnalysisTables] = None,
+    backend: Optional[str] = None,
+):
+    """Algorithm 2 as a breadth-wise batched frontier search.
+
+    Result-identical to :func:`repro.core.federated.grid_search_dfs`: the
+    frontier is kept in the DFS's visit order (lexicographic, hint-first
+    when warm-started), so the first schedulable full-depth candidate is
+    the same allocation, with the same per-task analysis.  Differences:
+    ``candidates_tried`` counts breadth-wise work (all surviving prefixes
+    of a depth are analyzed before descending; the DFS stops expanding at
+    its first success), and when ``max_nodes`` truncates the search the
+    two engines may give up on different subtrees.
+
+    The final depth is analyzed in lexicographic chunks with early exit,
+    so a search that succeeds does not pay for the whole last level.
+    """
+    from .federated import FederatedResult, _suffix_mins, min_viable_alloc
+
+    n = len(taskset)
+    mins = min_viable_alloc(taskset, gn_total)
+    if mins is None:
+        return FederatedResult(False, None, None, 0)
+    suffix = _suffix_mins(mins)
+
+    ana = BatchAnalyzer(taskset, tightened=tightened, tables=tables,
+                        backend=backend)
+    tried = 0
+    prefixes = np.zeros((1, 0), dtype=np.int64)
+    rems = np.array([gn_total], dtype=np.int64)
+    # per depth: (DepthAnalysis, kept child rows) for winner reconstruction
+    store: list[tuple[DepthAnalysis, np.ndarray]] = []
+
+    def reconstruct(da: DepthAnalysis, w: int) -> "FederatedResult":
+        chain: list[TaskAnalysis] = [da.task_analysis(w)]
+        alloc = [int(da.g[w])]
+        pos = int(da.parent[w])
+        for depth in range(n - 2, -1, -1):
+            prev, keep = store[depth]
+            row = int(keep[pos])
+            chain.append(prev.task_analysis(row))
+            alloc.append(int(prev.g[row]))
+            pos = int(prev.parent[row])
+        chain.reverse()
+        alloc.reverse()
+        return FederatedResult(
+            True, tuple(alloc), SetAnalysis(tuple(chain)), tried
+        )
+
+    for k in range(n):
+        lo = mins[k]
+        his = rems - suffix[k + 1]
+        h = hint[k] if hint is not None and k < len(hint) else None
+        if h is None:
+            counts = np.maximum(his - lo + 1, 0)
+            parent = np.repeat(np.arange(len(rems)), counts)
+            starts = np.concatenate(([0], np.cumsum(counts)[:-1]))
+            g = (np.arange(int(counts.sum())) - starts[parent]) + lo
+        else:
+            pl: list[int] = []
+            gl: list[int] = []
+            for p, hi in enumerate(his.tolist()):
+                if lo <= h <= hi:
+                    order = [h] + [x for x in range(lo, hi + 1) if x != h]
+                else:
+                    order = list(range(lo, hi + 1))
+                gl.extend(order)
+                pl.extend([p] * len(order))
+            parent = np.asarray(pl, dtype=np.int64)
+            g = np.asarray(gl, dtype=np.int64)
+
+        if k < n - 1:
+            budget = max_nodes - tried
+            if len(g) > budget:
+                g, parent = g[:budget], parent[:budget]
+            if len(g) == 0:
+                return FederatedResult(False, None, None, tried)
+            da = ana.analyze_depth(k, prefixes, g, parent)
+            tried += len(g)
+            keep = np.nonzero(da.schedulable)[0]
+            store.append((da, keep))
+            if keep.size == 0:
+                return FederatedResult(False, None, None, tried)
+            prefixes = np.concatenate(
+                [prefixes[parent[keep]], g[keep, None]], axis=1
+            )
+            rems = rems[parent[keep]] - g[keep]
+        else:
+            offset = 0
+            while offset < len(g):
+                take = min(_FINAL_CHUNK, len(g) - offset, max_nodes - tried)
+                if take <= 0:
+                    break
+                cg = g[offset:offset + take]
+                cp = parent[offset:offset + take]
+                da = ana.analyze_depth(k, prefixes, cg, cp)
+                tried += take
+                sched = np.nonzero(da.schedulable)[0]
+                if sched.size:
+                    return reconstruct(da, int(sched[0]))
+                offset += take
+            return FederatedResult(False, None, None, tried)
+
+    raise AssertionError("unreachable")  # pragma: no cover

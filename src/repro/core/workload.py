@@ -21,14 +21,18 @@ literal cross-checks against the printed formulas.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import math
 from typing import Sequence
+
+import numpy as np
 
 from .task import RTTask, SegmentKind
 
 __all__ = [
     "ResourceView",
+    "StaircaseArrays",
     "ViewTables",
     "cpu_view",
     "mem_view",
@@ -141,6 +145,31 @@ def suspension_oblivious_view(task: RTTask, n_vsm: int) -> ResourceView:
     return _build_view(task, SegmentKind.CPU, n_vsm)
 
 
+@dataclasses.dataclass(frozen=True)
+class StaircaseArrays:
+    """One view's workload staircase as flat ``(K, P)`` float arrays.
+
+    Row ``h`` holds the :class:`ViewTables` prefix sums for the window
+    starting at execution segment ``h``: ``cum_ls[h, p]`` is the cumulative
+    L̂+S advance through window position ``p``, ``cum_l[h, p]`` the
+    cumulative execution, ``length[h, p]`` the position's own L̂.  This is
+    the exchange format of the batched analyzer (`repro.core.rta_batch`):
+    ``W^h(t)`` for a whole vector of ``t`` is one ``searchsorted`` per row.
+
+    ``min_horizon`` is the smallest per-row precomputed horizon; every
+    ``t < min_horizon`` is answerable from the arrays alone.  Unlike the
+    ``3K+2``-position rows the scalar bisect path keeps, these arrays are
+    built to cover an explicit caller horizon: a *low*-priority task's
+    fixed point queries a high-priority view at windows up to its own
+    deadline, which can span many of the view's periods.
+    """
+
+    cum_ls: np.ndarray   # (K, P) float64
+    cum_l: np.ndarray    # (K, P) float64
+    length: np.ndarray   # (K, P) float64
+    min_horizon: float
+
+
 class ViewTables:
     """Fast evaluation of max_h W^h(t) for one view.
 
@@ -192,6 +221,79 @@ class ViewTables:
             min_horizon = min(min_horizon, cum_ls[-1])
         self._min_horizon = min_horizon
         self._cache: dict[float, float] = {}
+        self._arrays: StaircaseArrays | None = None
+        self._lists: tuple | None = None
+        self._lists_src: StaircaseArrays | None = None
+
+    def as_lists(self, horizon: float = 0.0) -> tuple:
+        """``(cum_ls, cum_l, length, min_horizon)`` rows as plain lists.
+
+        The scalar continuation of the batched fixed point walks these with
+        monotone per-row pointers; plain-list indexing beats NumPy scalar
+        boxing by an order of magnitude there."""
+        arr = self.as_arrays(horizon)
+        if self._lists_src is not arr:
+            self._lists = (
+                arr.cum_ls.tolist(),
+                arr.cum_l.tolist(),
+                arr.length.tolist(),
+                arr.min_horizon,
+            )
+            self._lists_src = arr
+        return self._lists
+
+    # Hard cap on positions per row when extending toward a horizon: a
+    # degenerate zero-advance cycle would otherwise loop forever.  Beyond
+    # the cap, min_horizon stays short and callers use the scalar fallback.
+    _MAX_POSITIONS = 65_536
+
+    def as_arrays(self, horizon: float = 0.0) -> StaircaseArrays:
+        """The staircase compiled to dense arrays covering ``horizon``.
+
+        Rows are extended (by continuing the exact ``workload_fn``
+        accumulation) until every row's cumulative advance strictly exceeds
+        ``horizon``, so any window ``t <= horizon`` is answerable by pure
+        array lookups.  The largest build is cached; asking for a smaller
+        horizon returns it unchanged, a larger one rebuilds once.
+        """
+        cached = self._arrays
+        if cached is not None and (
+            cached.min_horizon > horizon
+            or cached.cum_ls.shape[1] >= self._MAX_POSITIONS
+        ):
+            return cached
+        view = self.view
+        k = view.k
+        # Per-position (L̂, L̂+S) follows a k-periodic pattern; only the one
+        # absolute position j == k-1 (the first job's last exec segment)
+        # deviates, using first_wrap instead of steady_wrap.  A full cycle
+        # advances by at least max(T, span) > 0, so the position count is
+        # bounded by ~k * (horizon / T); cap it against pathological views.
+        cyc_len = np.asarray(view.exec_hi, dtype=np.float64)
+        cyc_s = np.asarray(view.gap_lo + (view.steady_wrap,), dtype=np.float64)
+        cyc_adv = cyc_len + cyc_s
+        cycle_advance = float(cyc_adv.sum())
+        need = 3 * k + 2
+        if cycle_advance > 0.0:
+            extra = horizon + view.first_wrap + view.steady_wrap + cycle_advance
+            need = max(need, int(extra / cycle_advance + 2) * k)
+        p = min(need, self._MAX_POSITIONS)
+        # absolute segment index per (row h, position): j = h + pos
+        j = np.arange(k)[:, None] + np.arange(p)[None, :]
+        length = cyc_len[j % k]
+        adv = cyc_adv[j % k]
+        adv[j == k - 1] = view.exec_hi[k - 1] + view.first_wrap
+        # np.add.accumulate emits every partial sum sequentially, so the
+        # prefix rows are bit-identical to the workload_fn recurrence.
+        cum_ls = np.add.accumulate(adv, axis=1)
+        cum_l = np.add.accumulate(length, axis=1)
+        self._arrays = StaircaseArrays(
+            cum_ls=cum_ls,
+            cum_l=cum_l,
+            length=length,
+            min_horizon=float(cum_ls[:, -1].min()),
+        )
+        return self._arrays
 
     def max_workload(self, t: float) -> float:
         """max_h W^h(t) over all window starts (bisect per row, cached)."""
@@ -200,18 +302,26 @@ class ViewTables:
         cached = self._cache.get(t)
         if cached is not None:
             return cached
+        rows = self._rows
         if t >= self._min_horizon:
-            # Window reaches past some row's precomputed horizon (degenerate
-            # zero-advance cycles, or t beyond ~2 periods — never hit by
-            # constrained-deadline fixed points, which bail at t > D <= T).
+            # Window reaches past the ~2-period rows the constructor builds
+            # (a LOW-priority task's fixed point queries this view at
+            # windows up to its own deadline, i.e. many of our periods).
+            # If the batched analyzer already compiled horizon-extended
+            # arrays (as_arrays), bisect those — bit-identical to the
+            # step-by-step recurrence; else fall back to workload_fn.
+            arr = self._arrays
+            if arr is not None and t < arr.min_horizon:
+                rows = zip(arr.cum_ls, arr.cum_l, arr.length)
+            else:
+                rows = None
+        if rows is None:
             out = max(
                 workload_fn(self.view, h, t) for h in range(self.view.k)
             )
         else:
-            import bisect
-
             out = 0.0
-            for cum_ls, cum_l, length in self._rows:
+            for cum_ls, cum_l, length in rows:
                 nfull = bisect.bisect_right(cum_ls, t)
                 if nfull:
                     consumed = cum_ls[nfull - 1]
@@ -224,7 +334,11 @@ class ViewTables:
                 if work > out:
                     out = work
         if len(self._cache) >= self._CACHE_LIMIT:
-            self._cache.clear()
+            # Drop only the oldest half (dicts preserve insertion order) so
+            # the windows a fixed point is actively revisiting survive
+            # eviction mid-iteration.
+            for key in list(self._cache)[: self._CACHE_LIMIT // 2]:
+                del self._cache[key]
         self._cache[t] = out
         return out
 

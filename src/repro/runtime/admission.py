@@ -43,11 +43,14 @@ class AdmissionController:
         mode: str = "greedy+grid",
         max_candidates: int = 2000,
         trace: Optional[EventTrace] = None,
+        engine: str = "batch",
     ):
         # ``mode`` is accepted for signature compatibility with the one-shot
         # controller but IGNORED: the dynamic controller always runs its
-        # pinned warm path first and falls back to the hint-seeded grid DFS,
-        # which dominates every legacy mode in both coverage and latency.
+        # pinned warm path first and falls back to the hint-seeded grid
+        # search, which dominates every legacy mode in both coverage and
+        # latency.  ``engine`` selects the batched frontier analyzer
+        # (default) or the scalar reference path ("scalar") underneath.
         self.gn_total = gn_total
         self.mode = mode
         self._tightened = tightened
@@ -58,6 +61,7 @@ class AdmissionController:
             allow_realloc=True,
             max_candidates=max_candidates,
             trace=trace,
+            engine=engine,
         )
 
     @property
