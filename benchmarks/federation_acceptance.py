@@ -1,0 +1,256 @@
+"""Fleet-federation benchmark: broker admit latency + migration cost
+-> BENCH_federation.json.
+
+Three measurements at fleet scale (the ``bench_admit`` regime of
+``rta_throughput.py``: ~20 resident services per host on 28 slices, where
+the batched certification sweep is the controller's fast path):
+
+  admit      broker admission latency versus host count (1 / 2 / 4 hosts,
+             arrival rate scaled with the fleet so every host reaches
+             similar residency).  The acceptance assertion: the broker's
+             mean admit at the LARGEST fleet — placement ordering, per-host
+             rejection fallback and all — stays under the PR-3 single-host
+             *cold* path (``DynamicController`` with ``engine="scalar"``
+             on the 1-host trace), i.e. federation never un-does the
+             batched-certification win.
+
+  migration  departure-imbalance migration cost: an imbalanced two-host
+             fleet drains one host; each reclaim triggers an
+             envelope-certified admit on the target plus a
+             release-at-boundary on the source.  Reported per migration.
+
+  sim        a 3-host churn run through ``simulate_fleet`` confirming the
+             hard invariants end to end (no deadline misses, no analytic
+             bound violations, ≥1 migration exercised).
+
+  PYTHONPATH=src python benchmarks/federation_acceptance.py \\
+      [--out BENCH_federation.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.core import ChurnConfig, GeneratorConfig, generate_churn_trace
+from repro.runtime import simulate_fleet
+from repro.sched import CapacityBroker, DynamicController
+
+GN_PER_HOST = 28
+HOST_COUNTS = (1, 2, 4)
+
+#: fleet-scale churn (matches rta_throughput.bench_admit): many small
+#: services so resident sets reach ~20 tasks per host
+FLEET_CFG = ChurnConfig(
+    mean_interarrival=110.0,
+    lifetime_range=(3500.0, 7000.0),
+    util_range=(0.02, 0.05),
+    task_config=GeneratorConfig(n_subtasks=3),
+)
+
+
+def _events(n_hosts: int, seed: int = 1, horizon: float = 4000.0):
+    """Arrival trace scaled so each of ``n_hosts`` hosts sees the same
+    per-host load as the single-host baseline."""
+    import dataclasses
+
+    cfg = dataclasses.replace(
+        FLEET_CFG, mean_interarrival=FLEET_CFG.mean_interarrival / n_hosts
+    )
+    return generate_churn_trace(seed=seed, horizon=horizon, config=cfg)
+
+
+def bench_admit(seed: int = 1) -> dict:
+    """Broker admit latency vs host count (instant mode, batch engine)."""
+    out: dict = {}
+    for n_hosts in HOST_COUNTS:
+        broker = CapacityBroker.build(
+            n_hosts, GN_PER_HOST, transition="instant", engine="batch",
+            migrate_on_departure=False,
+        )
+        total = worst = 0.0
+        n = accepted = 0
+        residents_peak = 0
+        for ev in _events(n_hosts, seed=seed):
+            if ev.kind == "release":
+                broker.release(ev.name)
+                continue
+            t0 = time.perf_counter()
+            dec = broker.admit(ev.task, t=ev.time)
+            dt = time.perf_counter() - t0
+            total += dt
+            worst = max(worst, dt)
+            n += 1
+            accepted += int(dec.admitted)
+            residents_peak = max(residents_peak, len(broker.allocation))
+        out[str(n_hosts)] = {
+            "hosts": n_hosts,
+            "admissions": n,
+            "accepted": accepted,
+            "residents_peak": residents_peak,
+            "total_ms": round(total * 1e3, 3),
+            "mean_ms": round(total / n * 1e3, 3),
+            "worst_ms": round(worst * 1e3, 3),
+        }
+    return out
+
+
+def bench_single_host_cold(seed: int = 1) -> dict:
+    """The PR-3 cold path: scalar-engine single-host admission on the
+    1-host trace (the pre-batching per-candidate loop)."""
+    ctl = DynamicController(GN_PER_HOST, transition="instant",
+                            engine="scalar")
+    total = worst = 0.0
+    n = 0
+    for ev in _events(1, seed=seed):
+        if ev.kind == "release":
+            ctl.release(ev.name)
+            continue
+        t0 = time.perf_counter()
+        ctl.admit(ev.task, t=ev.time)
+        dt = time.perf_counter() - t0
+        total += dt
+        worst = max(worst, dt)
+        n += 1
+    return {
+        "admissions": n,
+        "total_ms": round(total * 1e3, 3),
+        "mean_ms": round(total / n * 1e3, 3),
+        "worst_ms": round(worst * 1e3, 3),
+    }
+
+
+def bench_migration(seed: int = 2) -> dict:
+    """Cost of one departure-imbalance migration (certified admit on the
+    target + release on the source), instant mode so each completes
+    inline and is individually timeable."""
+    broker = CapacityBroker.build(
+        2, GN_PER_HOST, transition="instant", engine="batch",
+        placement="first_fit", imbalance_threshold=0.2,
+        max_migrations_per_event=1,
+    )
+    admitted = []
+    for ev in _events(1, seed=seed, horizon=2500.0):
+        if ev.kind == "admit" and broker.admit(ev.task).admitted:
+            admitted.append(ev.name)
+    migrations = 0
+    t_mig = 0.0
+    for name in admitted:
+        if broker.active_host(name) != 0:
+            continue                     # already migrated away
+        before = len(broker.migration_log)
+        t0 = time.perf_counter()
+        broker.release(name)             # reclaim triggers _rebalance
+        dt = time.perf_counter() - t0
+        moved = len(broker.migration_log) - before
+        if moved:
+            migrations += moved
+            t_mig += dt
+    return {
+        "services_seeded": len(admitted),
+        "migrations": migrations,
+        "total_ms": round(t_mig * 1e3, 3),
+        "mean_ms_per_migration": round(t_mig / migrations * 1e3, 3)
+        if migrations else None,
+    }
+
+
+def bench_sim(seed: int = 0) -> dict:
+    events = generate_churn_trace(
+        seed=seed, horizon=5000.0,
+        config=ChurnConfig(mean_interarrival=150.0,
+                           lifetime_range=(800.0, 2500.0)),
+    )
+    res = simulate_fleet(events, n_hosts=3, gn_per_host=6, horizon=6000.0,
+                         seed=seed)
+    violations = res.bound_violations()
+    out = {
+        "hosts": 3,
+        "admitted": len(res.admitted),
+        "rejected": len(res.rejected),
+        "jobs": res.total_jobs,
+        "migrations": len(res.migrations),
+        "deadline_misses": sum(res.misses.values()),
+        "bound_violations": len(violations),
+    }
+    assert not res.any_miss, f"fleet deadline misses: {res.misses}"
+    assert not violations, f"fleet bound violations: {violations[:3]}"
+    assert res.migrations, "fleet scenario exercised no migrations"
+    return out
+
+
+def run(rows: list | None = None, out: str = "BENCH_federation.json") -> dict:
+    rows = rows if rows is not None else []
+    admit = bench_admit()
+    cold = bench_single_host_cold()
+    migration = bench_migration()
+    sim = bench_sim()
+
+    biggest = admit[str(max(HOST_COUNTS))]
+    result = {
+        "config": {
+            "gn_per_host": GN_PER_HOST,
+            "host_counts": list(HOST_COUNTS),
+            "churn": "fleet-scale (~20 residents/host, util 0.02-0.05)",
+        },
+        "admit": admit,
+        "single_host_cold_scalar": cold,
+        "cold_vs_fleet_speedup": round(
+            cold["mean_ms"] / biggest["mean_ms"], 2
+        ),
+        "migration": migration,
+        "sim": sim,
+    }
+
+    # the acceptance criterion this benchmark exists to track: batched
+    # certification keeps fleet-scale federated admission under the PR-3
+    # single-host cold path
+    assert biggest["mean_ms"] < cold["mean_ms"], (
+        f"{max(HOST_COUNTS)}-host broker admit ({biggest['mean_ms']} ms mean)"
+        f" not under the single-host cold scalar path ({cold['mean_ms']} ms)"
+    )
+    assert migration["migrations"] > 0, "migration bench moved nothing"
+
+    with open(out, "w") as fh:
+        json.dump(result, fh, indent=2)
+    for n_hosts in HOST_COUNTS:
+        rows.append((f"federation,admit_mean_ms_{n_hosts}h",
+                     admit[str(n_hosts)]["mean_ms"]))
+    rows.append(("federation,single_host_cold_mean_ms", cold["mean_ms"]))
+    rows.append(("federation,cold_vs_fleet_speedup",
+                 result["cold_vs_fleet_speedup"]))
+    rows.append(("federation,migration_mean_ms",
+                 migration["mean_ms_per_migration"]))
+    rows.append(("federation,sim_migrations", sim["migrations"]))
+    rows.append(("federation,sim_misses", sim["deadline_misses"]))
+    return result
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="BENCH_federation.json")
+    args = ap.parse_args()
+    r = run(out=args.out)
+    for n_hosts in HOST_COUNTS:
+        a = r["admit"][str(n_hosts)]
+        print(f"admit {n_hosts}h: mean {a['mean_ms']} ms  worst "
+              f"{a['worst_ms']} ms  ({a['accepted']}/{a['admissions']} "
+              f"accepted, peak {a['residents_peak']} residents)")
+    c = r["single_host_cold_scalar"]
+    print(f"single-host cold scalar: mean {c['mean_ms']} ms "
+          f"(fleet is {r['cold_vs_fleet_speedup']}x under it)")
+    m = r["migration"]
+    print(f"migration: {m['migrations']} moves, "
+          f"{m['mean_ms_per_migration']} ms each")
+    s = r["sim"]
+    print(f"sim: {s['jobs']} jobs on {s['hosts']} hosts, "
+          f"{s['migrations']} migrations, {s['deadline_misses']} misses, "
+          f"{s['bound_violations']} bound violations")
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main())

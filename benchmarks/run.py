@@ -36,6 +36,7 @@ def main(argv=None) -> int:
 
     from benchmarks import (
         churn_acceptance,
+        federation_acceptance,
         fig4_kernel_scaling,
         fig6_interleave,
         fig12_system_validation,
@@ -53,6 +54,7 @@ def main(argv=None) -> int:
     stage("fig12", fig12_system_validation.run, max(4, n_sets // 2), rows=rows)
     stage("churn", churn_acceptance.run, rows)
     stage("rta", rta_throughput.run, rows)
+    stage("federation", federation_acceptance.run, rows)
     stage("roofline", roofline_table.run, rows)
     stage("roofline_multipod", roofline_table.run, rows, mesh="2x16x16")
 

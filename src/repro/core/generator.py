@@ -213,27 +213,34 @@ class ScenarioPreset:
     (deterministic even-split fallback when the draw is unschedulable, so
     miss-regime scenarios stay recordable).  ``kind="churn"`` drives
     :func:`repro.runtime.simulate_churn` over a generated admit/release
-    trace.  The golden corpus under ``tests/golden/`` records one run per
-    preset; ``python -m repro.runtime.record_golden`` regenerates it.
+    trace.  ``kind="fleet"`` drives :func:`repro.runtime.simulate_fleet`
+    over the same kind of trace, broker-routed across ``n_hosts`` hosts of
+    ``gn_total`` slices each (the fleet presets).  The golden corpus under
+    ``tests/golden/`` records one run per preset;
+    ``python -m repro.runtime.record_golden`` regenerates it.
     """
 
     name: str
-    kind: str                              # "static" | "churn"
+    kind: str                              # "static" | "churn" | "fleet"
     seed: int
     horizon: float                         # simulated ms
-    gn_total: int = 10
+    gn_total: int = 10                     # per host for kind="fleet"
     release_jitter: bool = True
     worst_case: bool = False
     description: str = ""
     # static scenarios
     total_util: float = 0.5
     config: GeneratorConfig = GeneratorConfig()
-    # churn scenarios
+    # churn + fleet scenarios
     churn: ChurnConfig = ChurnConfig()
     churn_horizon: float = 0.0             # arrival-generation window
+    # fleet scenarios
+    n_hosts: int = 1
+    placement: str = "least_loaded"
+    imbalance_threshold: float = 0.25
 
     def __post_init__(self) -> None:
-        if self.kind not in ("static", "churn"):
+        if self.kind not in ("static", "churn", "fleet"):
             raise ValueError(f"unknown scenario kind {self.kind!r}")
 
     def build_static(self) -> tuple["TaskSet", list[int]]:
@@ -250,6 +257,7 @@ class ScenarioPreset:
         return ts, [max(1, self.gn_total // len(ts))] * len(ts)
 
     def build_churn(self) -> list[ChurnEvent]:
+        """Admit/release trace for ``kind="churn"`` and ``kind="fleet"``."""
         return generate_churn_trace(self.seed, self.churn_horizon,
                                     config=self.churn)
 
@@ -307,6 +315,16 @@ GOLDEN_SCENARIOS: tuple[ScenarioPreset, ...] = (
         gn_total=8, release_jitter=False, worst_case=True,
         churn=ChurnConfig(), churn_horizon=4000.0,
         description="WCET churn: deterministic durations, periodic releases",
+    ),
+    ScenarioPreset(
+        name="fleet_churn", kind="fleet", seed=0, horizon=7000.0,
+        gn_total=6, n_hosts=3, placement="least_loaded",
+        churn=ChurnConfig(mean_interarrival=150.0,
+                          lifetime_range=(800.0, 2500.0)),
+        churn_horizon=6000.0,
+        description="3-host broker-routed churn: placement, per-host "
+                    "rejection fallback, and departure-imbalance "
+                    "migrations under the mode-change protocol",
     ),
 )
 

@@ -8,10 +8,11 @@ engine.py      THE discrete-event engine: one CPU-preemptive /
                bus-non-preemptive / federated-GPU arbitration loop,
                parameterized by a SchedulingPolicy (membership, priority,
                releases, completion bookkeeping)
-simulator.py   the two shipped policies over the engine — simulate()
-               (fixed task set, Figs. 12-13 analogue) and simulate_churn()
-               (dynamic membership validating the online scheduler's
-               mode-change protocol)
+simulator.py   the shipped policies over the engine — simulate() (fixed
+               task set, Figs. 12-13 analogue), simulate_churn() (dynamic
+               membership validating the online scheduler's mode-change
+               protocol), and simulate_fleet() (broker-routed multi-host
+               churn with departure-imbalance migrations)
 record_golden.py  CLI recording the golden-trace regression corpus
                (tests/golden/) replayed by tests/test_golden_traces.py
 executor.py    wall-clock best-effort executor for real small models (demo),
@@ -20,7 +21,14 @@ executor.py    wall-clock best-effort executor for real small models (demo),
 from .admission import AdmissionController, AdmissionDecision
 from .engine import DiscreteEventEngine, EngineJob, SchedulingPolicy
 from .executor import Service, WallClockExecutor
-from .simulator import ChurnSimResult, SimResult, simulate, simulate_churn
+from .simulator import (
+    ChurnSimResult,
+    FleetSimResult,
+    SimResult,
+    simulate,
+    simulate_churn,
+    simulate_fleet,
+)
 from .task_spec import ServingTaskSpec, serving_task_to_rt
 
 __all__ = [
@@ -33,6 +41,8 @@ __all__ = [
     "simulate",
     "ChurnSimResult",
     "simulate_churn",
+    "FleetSimResult",
+    "simulate_fleet",
     "ServingTaskSpec",
     "serving_task_to_rt",
     "Service",

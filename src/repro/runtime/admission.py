@@ -1,15 +1,18 @@
 """Admission control: Algorithm 2 as a serving-cluster front door.
 
-The controller owns ``gn_total`` accelerator slices (e.g. the 16-chip
-"model"-axis groups of the production mesh).  Every admitted task gets a
-*dedicated* slice allocation (federated — no preemption needed) and the
-bus/CPU schedulability is re-verified on each admission with the full
-RTGPU analysis.  Rejected tasks leave the system state untouched.
+The controller owns ``gn_total`` accelerator slices per host (e.g. the
+16-chip "model"-axis groups of the production mesh).  Every admitted task
+gets a *dedicated* slice allocation (federated — no preemption needed)
+and the bus/CPU schedulability is re-verified on each admission with the
+full RTGPU analysis.  Rejected tasks leave the system state untouched.
 
 Since the online-scheduling subsystem landed this is a thin wrapper over
 :class:`repro.sched.DynamicController` in *instant*-transition mode: the
 front door admits before jobs exist, so allocation changes need no
-job-boundary staging.  The wrapper keeps the original one-shot API
+job-boundary staging.  With ``hosts > 1`` the wrapper fronts a
+:class:`repro.sched.CapacityBroker` instead — global admission with
+per-host rejection fallback over ``hosts`` identical instant-mode
+controllers.  Either way the wrapper keeps the original one-shot API
 (``admit`` / ``remove`` / ``current_taskset``) while inheriting the warm
 paths — pinned 1-D admission search, hint + view-table reuse on the grid
 fallback — so repeated admissions are far cheaper than re-running
@@ -21,8 +24,7 @@ import dataclasses
 from typing import Optional
 
 from repro.core import FederatedResult, RTTask, TaskSet
-from repro.core.rta import RtgpuIncremental, SetAnalysis
-from repro.sched import DynamicController, EventTrace
+from repro.sched import CapacityBroker, DynamicController, EventTrace
 
 __all__ = ["AdmissionController", "AdmissionDecision"]
 
@@ -30,9 +32,10 @@ __all__ = ["AdmissionController", "AdmissionDecision"]
 @dataclasses.dataclass(frozen=True)
 class AdmissionDecision:
     admitted: bool
-    alloc: Optional[dict]          # task name -> GN_i slices
+    alloc: Optional[dict]          # task name -> GN_i slices (fleet-wide)
     reason: str = ""
     result: Optional[FederatedResult] = None
+    host: Optional[int] = None     # admitting host (multi-host front doors)
 
 
 class AdmissionController:
@@ -44,6 +47,8 @@ class AdmissionController:
         max_candidates: int = 2000,
         trace: Optional[EventTrace] = None,
         engine: str = "batch",
+        hosts: int = 1,
+        placement: str = "least_loaded",
     ):
         # ``mode`` is accepted for signature compatibility with the one-shot
         # controller but IGNORED: the dynamic controller always runs its
@@ -51,34 +56,89 @@ class AdmissionController:
         # search, which dominates every legacy mode in both coverage and
         # latency.  ``engine`` selects the batched frontier analyzer
         # (default) or the scalar reference path ("scalar") underneath.
+        # ``hosts > 1`` federates admission across that many identical
+        # instant-mode controllers (``gn_total`` slices EACH) behind a
+        # CapacityBroker with the given placement policy.
         self.gn_total = gn_total
         self.mode = mode
+        self.hosts = hosts
         self._tightened = tightened
-        self._dyn = DynamicController(
-            gn_total,
-            tightened=tightened,
-            transition="instant",
-            allow_realloc=True,
-            max_candidates=max_candidates,
-            trace=trace,
-            engine=engine,
-        )
+        if hosts > 1:
+            self._dyn = None
+            self._broker = CapacityBroker.build(
+                hosts, gn_total,
+                trace=trace,
+                transition="instant",
+                engine=engine,
+                tightened=tightened,
+                allow_realloc=True,
+                max_candidates=max_candidates,
+                placement=placement,
+            )
+        else:
+            self._dyn = DynamicController(
+                gn_total,
+                tightened=tightened,
+                transition="instant",
+                allow_realloc=True,
+                max_candidates=max_candidates,
+                trace=trace,
+                engine=engine,
+            )
+            self._broker = None
 
     @property
     def dynamic(self) -> DynamicController:
-        """The underlying online controller (admission epochs, bounds)."""
+        """The underlying online controller (admission epochs, bounds);
+        single-host front doors only."""
+        if self._dyn is None:
+            raise AttributeError(
+                "multi-host front door has no single controller; use .broker"
+            )
         return self._dyn
 
     @property
+    def broker(self) -> CapacityBroker:
+        """The underlying capacity broker (multi-host front doors only)."""
+        if self._broker is None:
+            raise AttributeError(
+                "single-host front door has no broker; use .dynamic"
+            )
+        return self._broker
+
+    @property
     def tasks(self) -> tuple[RTTask, ...]:
-        ts = self._dyn.current_taskset()
+        ts = self.current_taskset()
         return tuple(ts.tasks) if ts else ()
 
     @property
     def allocation(self) -> dict:
-        return self._dyn.allocation
+        front = self._dyn if self._dyn is not None else self._broker
+        return front.allocation
+
+    def _host_result(self, ctl: DynamicController,
+                     tried: int) -> Optional[FederatedResult]:
+        """Re-attach the per-task analysis products of one host's decision
+        (the one-shot controller's API).  The controller exposes the
+        analysis it already certified (:meth:`DynamicController.
+        set_analysis` — O(n) warm fixed points over its shared tables)."""
+        ts = ctl.current_taskset()
+        if ts is None:
+            return None
+        alloc = ctl.allocation
+        alloc_list = tuple(alloc[t.name] for t in ts)
+        return FederatedResult(True, alloc_list, ctl.set_analysis(), tried)
 
     def admit(self, task: RTTask) -> AdmissionDecision:
+        if self._broker is not None:
+            bdec = self._broker.admit(task)
+            if not bdec.admitted:
+                return AdmissionDecision(False, None, reason=bdec.reason)
+            host = bdec.host
+            result = self._host_result(self._broker.hosts[host],
+                                       bdec.decision.tried)
+            return AdmissionDecision(True, self._broker.allocation,
+                                     result=result, host=host)
         dec = self._dyn.admit(task)
         if not dec.admitted:
             return AdmissionDecision(
@@ -86,28 +146,19 @@ class AdmissionController:
                 reason=dec.reason or
                 "schedulability test failed under every allocation",
             )
-        alloc = self._dyn.allocation
-        ts = self._dyn.current_taskset()
-        alloc_list = tuple(alloc[t.name] for t in ts)
-        # re-attach the per-task SetAnalysis the one-shot controller used to
-        # expose on successful decisions; sharing the dynamic controller's
-        # view tables makes this O(n) fixed points, not a cold re-analysis
-        inc = RtgpuIncremental(
-            ts, tightened=self._tightened, tables=self._dyn.tables
-        )
-        analysis = SetAnalysis(tuple(
-            inc.analyze_task(k, alloc_list) for k in range(len(ts))
-        ))
-        result = FederatedResult(True, alloc_list, analysis, dec.tried)
-        return AdmissionDecision(True, alloc, result=result)
+        result = self._host_result(self._dyn, dec.tried)
+        return AdmissionDecision(True, self._dyn.allocation, result=result)
 
     def remove(self, name: str) -> bool:
+        if self._broker is not None:
+            return self._broker.release(name)
         return self._dyn.release(name)
 
     def current_taskset(self) -> Optional[TaskSet]:
-        return self._dyn.current_taskset()
+        front = self._dyn if self._dyn is not None else self._broker
+        return front.current_taskset()
 
     def current_alloc_list(self) -> list[int]:
         ts = self.current_taskset()
-        alloc = self._dyn.allocation
+        alloc = self.allocation
         return [alloc[t.name] for t in ts] if ts else []

@@ -17,17 +17,28 @@ emission for ``release`` and ``preempt`` events.
 
 Everything *workload-specific* — who the members are, their priority
 order, when jobs are released, what happens when one completes — lives in
-a :class:`SchedulingPolicy`.  ``repro.runtime.simulator`` provides the two
-shipped policies: a fixed task set (:func:`~repro.runtime.simulate`) and
+a :class:`SchedulingPolicy`.  ``repro.runtime.simulator`` provides the
+shipped policies: a fixed task set (:func:`~repro.runtime.simulate`),
 dynamic membership under the online controller
-(:func:`~repro.runtime.simulate_churn`).  New variants (preemptive GPU
-slices, urgency-aware launching) add a policy, not a third copy of the
-arbitration loop.
+(:func:`~repro.runtime.simulate_churn`), and broker-routed multi-host
+churn (:func:`~repro.runtime.simulate_fleet`).  New variants (preemptive
+GPU slices, urgency-aware launching) add a policy, not a third copy of
+the arbitration loop.
+
+**Resource lanes (multi-host).**  Each member belongs to a *resource
+group* (:meth:`SchedulingPolicy.resource_group`; default: one shared
+group) owning its own CPU core and copy bus.  A fleet runs one lane group
+per host inside one lockstep event loop — equivalent to one engine per
+host with perfectly synchronized clocks, which keeps cross-host causality
+(broker admissions, migrations at job boundaries) trivially correct: the
+single loop processes every event in global time order.  Single-group
+policies are byte-identical to the pre-federation engine.
 
 Determinism contract: the engine iterates members only in the policy's
-arbitration order and never touches an unordered set, so a run is a pure
-function of (policy state, RNG seed) — the property the golden-trace
-corpus under ``tests/golden/`` pins.
+arbitration order (and groups in their order of first appearance there)
+and never touches an unordered set, so a run is a pure function of
+(policy state, RNG seed) — the property the golden-trace corpus under
+``tests/golden/`` pins.
 """
 from __future__ import annotations
 
@@ -112,6 +123,18 @@ class SchedulingPolicy(abc.ABC):
         """Task name used in trace events for ``key``."""
         return str(key)
 
+    def resource_group(self, key) -> Hashable:
+        """CPU/bus lane ``key`` contends in (e.g. the host index).  Members
+        of different groups never contend; the default puts every member
+        on one shared CPU and bus (the single-host engine)."""
+        return None
+
+    def event_meta(self, key) -> dict:
+        """Extra meta stamped onto every trace event the engine records
+        for ``key`` (e.g. ``{"host": h}`` for host-tagged fleet traces).
+        Default: none."""
+        return {}
+
 
 class DiscreteEventEngine:
     """The shared event loop.  Construct with a policy, call :meth:`run`.
@@ -128,14 +151,15 @@ class DiscreteEventEngine:
         self.trace = trace
         self.jobs: dict[Hashable, Optional[EngineJob]] = {}
         self.now = 0.0
-        self.bus_owner: Optional[Hashable] = None   # non-preemptive holder
-        self._last_cpu_owner: Optional[Hashable] = None
+        # per resource group: non-preemptive bus holder / last core owner
+        self.bus_owner: dict[Hashable, Hashable] = {}
+        self._last_cpu_owner: dict[Hashable, Hashable] = {}
         policy.bind(self)
 
     def record(self, kind: str, key, **meta) -> None:
         if self.trace is not None:
             self.trace.record(self.now, kind, self.policy.display_name(key),
-                              **meta)
+                              **{**self.policy.event_meta(key), **meta})
 
     def seg_kind(self, key) -> Optional[SegmentKind]:
         """Current segment kind of ``key``'s job (None when idle/absent)."""
@@ -158,46 +182,66 @@ class DiscreteEventEngine:
             policy.begin_step(self.now)
             policy.release_jobs(self.now)
 
-            # 2. arbitration under the policy's fixed-priority order
+            # 2. arbitration under the policy's fixed-priority order, one
+            # CPU core + one bus per resource group (groups in order of
+            # first appearance — deterministic)
             order = policy.arbitration_order()
-            cpu_owner = next(
-                (k for k in order if self.seg_kind(k) is SegmentKind.CPU),
-                None,
-            )
-            last = self._last_cpu_owner
-            if (
-                self.trace is not None
-                and last is not None
-                and cpu_owner != last
-                and self.seg_kind(last) is SegmentKind.CPU
-                and self.jobs[last].remaining > _EPS
-            ):
-                self.record(
-                    "preempt", last,
-                    by=policy.display_name(cpu_owner)
-                    if cpu_owner is not None else "",
-                )
-            self._last_cpu_owner = cpu_owner
+            groups: list = []
+            members: dict = {}
+            for k in order:
+                g = policy.resource_group(k)
+                if g not in members:
+                    members[g] = []
+                    groups.append(g)
+                members[g].append(k)
 
-            if (
-                self.bus_owner is not None
-                and self.seg_kind(self.bus_owner) is not SegmentKind.MEM
-            ):
-                self.bus_owner = None
-            if self.bus_owner is None:
-                self.bus_owner = next(
-                    (k for k in order if self.seg_kind(k) is SegmentKind.MEM),
+            cpu_owners: dict = {}
+            for g in groups:
+                cpu_owner = next(
+                    (k for k in members[g]
+                     if self.seg_kind(k) is SegmentKind.CPU),
                     None,
                 )
+                last = self._last_cpu_owner.get(g)
+                if (
+                    self.trace is not None
+                    and last is not None
+                    and cpu_owner != last
+                    and self.seg_kind(last) is SegmentKind.CPU
+                    and self.jobs[last].remaining > _EPS
+                ):
+                    self.record(
+                        "preempt", last,
+                        by=policy.display_name(cpu_owner)
+                        if cpu_owner is not None else "",
+                    )
+                self._last_cpu_owner[g] = cpu_owner
+                cpu_owners[g] = cpu_owner
 
-            # running: CPU owner, bus holder, every GPU segment (dedicated
-            # lanes) — kept in arbitration order for deterministic
-            # completion processing
+                owner = self.bus_owner.get(g)
+                if (
+                    owner is not None
+                    and self.seg_kind(owner) is not SegmentKind.MEM
+                ):
+                    owner = None
+                if owner is None:
+                    owner = next(
+                        (k for k in members[g]
+                         if self.seg_kind(k) is SegmentKind.MEM),
+                        None,
+                    )
+                self.bus_owner[g] = owner
+
+            # running: CPU owners, bus holders (groups in appearance
+            # order), every GPU segment (dedicated lanes) — kept in
+            # arbitration order for deterministic completion processing
             running = []
-            if cpu_owner is not None:
-                running.append(cpu_owner)
-            if self.bus_owner is not None:
-                running.append(self.bus_owner)
+            for g in groups:
+                if cpu_owners[g] is not None:
+                    running.append(cpu_owners[g])
+            for g in groups:
+                if self.bus_owner[g] is not None:
+                    running.append(self.bus_owner[g])
             for k in order:
                 if self.seg_kind(k) is SegmentKind.GPU:
                     running.append(k)
@@ -222,11 +266,12 @@ class DiscreteEventEngine:
                 job = self.jobs.get(k)
                 if job is None or job.remaining > _EPS:
                     continue
+                g = policy.resource_group(k)
                 if (
                     job.chain[job.seg_idx][0] is SegmentKind.MEM
-                    and self.bus_owner == k
+                    and self.bus_owner.get(g) == k
                 ):
-                    self.bus_owner = None
+                    self.bus_owner[g] = None
                 job.seg_idx += 1
                 if job.seg_idx < len(job.chain):
                     job.remaining = job.durations[job.seg_idx]

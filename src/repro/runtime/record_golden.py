@@ -27,7 +27,7 @@ from typing import Optional, Sequence
 from repro.core import GOLDEN_SCENARIOS, ScenarioPreset
 from repro.sched import EventTrace
 
-from .simulator import simulate, simulate_churn
+from .simulator import simulate, simulate_churn, simulate_fleet
 
 __all__ = ["GOLDEN_FORMAT", "preset_params", "record_scenario", "dump_doc",
            "main"]
@@ -46,13 +46,17 @@ def preset_params(preset: ScenarioPreset) -> dict:
     ``description`` is cosmetic (rewording it must not invalidate a
     recorded golden file), and fields the preset's kind never reads
     (``churn``/``churn_horizon`` for static scenarios, the task-set knobs
-    for churn ones) are dropped so unrelated default changes don't
-    spuriously demand re-recording."""
+    for churn/fleet ones, the fleet knobs for single-host kinds) are
+    dropped so unrelated default changes don't spuriously demand
+    re-recording."""
     params = dataclasses.asdict(preset)
-    irrelevant = (
-        ("churn", "churn_horizon") if preset.kind == "static"
-        else ("total_util", "config")
-    )
+    fleet_fields = ("n_hosts", "placement", "imbalance_threshold")
+    if preset.kind == "static":
+        irrelevant = ("churn", "churn_horizon") + fleet_fields
+    elif preset.kind == "churn":
+        irrelevant = ("total_util", "config") + fleet_fields
+    else:                                  # fleet
+        irrelevant = ("total_util", "config")
     for field in ("name", "kind", "description") + irrelevant:
         params.pop(field, None)
     return json.loads(json.dumps(params))
@@ -81,7 +85,7 @@ def record_scenario(preset: ScenarioPreset) -> dict:
             "misses": res.misses,
             "jobs": res.jobs,
         }
-    else:
+    elif preset.kind == "churn":
         events = preset.build_churn()
         res = simulate_churn(
             events, preset.gn_total, preset.horizon, seed=preset.seed,
@@ -95,6 +99,25 @@ def record_scenario(preset: ScenarioPreset) -> dict:
             "jobs": res.jobs,
             "admitted": res.admitted,
             "rejected": res.rejected,
+        }
+    else:                                  # fleet
+        events = preset.build_churn()
+        res = simulate_fleet(
+            events, preset.n_hosts, preset.gn_total, preset.horizon,
+            seed=preset.seed, release_jitter=preset.release_jitter,
+            worst_case=preset.worst_case, placement=preset.placement,
+            imbalance_threshold=preset.imbalance_threshold, trace=trace,
+        )
+        doc["result"] = {
+            "responses": res.responses,
+            "bounds": res.bounds,
+            "misses": res.misses,
+            "jobs": res.jobs,
+            "admitted": res.admitted,
+            "rejected": res.rejected,
+            "placements": res.placements,
+            "migrations": res.migrations,
+            "n_hosts": res.n_hosts,
         }
     doc["trace"] = trace.to_json()
     return doc

@@ -24,11 +24,18 @@ lives there, exactly once):
     :class:`repro.sched.DynamicController`, slices are reclaimed only at
     job boundaries (mode-change protocol), and every completed job is
     checked against the analytic bound certified by the admission epoch it
-    was released in.
+    was released in;
+  * :func:`simulate_fleet` — :class:`_FleetChurnPolicy`: multi-host churn —
+    arrivals are routed by a :class:`repro.sched.CapacityBroker` across N
+    hosts (one CPU + bus + slice-pool resource lane each, lockstepped in
+    one engine), departures trigger imbalance migrations executed through
+    the mode-change protocol, and the same observed-R ≤ certified-R̂ check
+    runs per job on whichever host it executed.
 
-Both record into an optional :class:`repro.sched.EventTrace` (releases,
-CPU preemptions, completions, deadline misses); the golden corpus under
-``tests/golden/`` pins their observable behavior event by event.
+All record into an optional :class:`repro.sched.EventTrace` (releases,
+CPU preemptions, completions, deadline misses — host-tagged in the fleet
+case); the golden corpus under ``tests/golden/`` pins their observable
+behavior event by event.
 """
 from __future__ import annotations
 
@@ -39,11 +46,18 @@ from typing import Optional, Sequence
 import numpy as np
 
 from repro.core import ChurnEvent, RTTask, SegmentKind, TaskSet
-from repro.sched import DynamicController, EventTrace
+from repro.sched import CapacityBroker, DynamicController, EventTrace
 
 from .engine import DiscreteEventEngine, EngineJob, SchedulingPolicy
 
-__all__ = ["SimResult", "simulate", "ChurnSimResult", "simulate_churn"]
+__all__ = [
+    "SimResult",
+    "simulate",
+    "ChurnSimResult",
+    "simulate_churn",
+    "FleetSimResult",
+    "simulate_fleet",
+]
 
 _EPS = 1e-9
 
@@ -392,4 +406,277 @@ def simulate_churn(
         jobs=policy.jobs_done,
         admitted=policy.admitted,
         rejected=policy.rejected,
+    )
+
+
+# ---- multi-host executor (federated broker validation) -----------------------
+
+
+@dataclasses.dataclass
+class FleetSimResult(ChurnSimResult):
+    """Per-service outcome of a multi-host churn run.
+
+    Extends :class:`ChurnSimResult` with fleet observables: the host each
+    service was placed on at admission, and every completed
+    departure-imbalance migration (``{"name", "src", "dst", "t"}``).  The
+    validation invariant is unchanged — ``observed ≤ bound`` for every
+    job, on whichever host it ran — plus: a migrating task's jobs must
+    never miss while its residency spans two hosts."""
+
+    placements: dict[str, int]
+    migrations: list[dict]
+    n_hosts: int
+
+
+class _FleetChurnPolicy(SchedulingPolicy):
+    """Broker-routed dynamic membership across N host resource lanes.
+
+    Member keys are ``(host, name)``; :meth:`resource_group` maps each to
+    its host lane, so every host arbitrates its own CPU and copy bus while
+    the single lockstep event loop keeps global time (and therefore
+    broker-admission / migration causality) exact.  Jobs sample durations
+    with the slice count committed *on the host they run on*; a migration
+    moves the member key — and its sporadic release schedule — from the
+    source lane to the target lane at the source job boundary."""
+
+    horizon_slack = _EPS
+
+    def __init__(
+        self,
+        events: Sequence[ChurnEvent],
+        broker: CapacityBroker,
+        rng: np.random.Generator,
+        release_jitter: bool,
+        worst_case: bool,
+    ):
+        self.broker = broker
+        self.rng = rng
+        self.release_jitter = release_jitter
+        self.worst_case = worst_case
+        self.pending = sorted(events, key=lambda e: (e.time, e.name))
+        self.ev_idx = 0
+        self.next_release: dict[tuple, float] = {}
+        self.responses: dict[str, list[float]] = {}
+        self.bounds: dict[str, list[float]] = {}
+        self.misses: dict[str, int] = {}
+        self.jobs_done: dict[str, int] = {}
+        self.admitted: list[str] = []
+        self.rejected: list[str] = []
+        self.placements: dict[str, int] = {}
+
+    # ---- engine hooks -------------------------------------------------------
+
+    def resource_group(self, key):
+        return key[0]
+
+    def display_name(self, key) -> str:
+        return key[1]
+
+    def event_meta(self, key) -> dict:
+        return {"host": key[0]}
+
+    # ---- bookkeeping --------------------------------------------------------
+
+    def _lift_bounds(self) -> None:
+        """Raise every in-flight job's bound to its host's current R̂.
+
+        An admission or an in-migration changes a host's interference; the
+        new epoch's bound is certified over the transitional set, so it
+        covers jobs of either epoch — lifting keeps the per-job validation
+        sound for jobs spanning the reconfiguration."""
+        for (h, name), job in self.engine.jobs.items():
+            if job is not None:
+                job.bound = max(job.bound, self.broker.hosts[h].bound(name))
+
+    def _boundary(self, name: str, now: float) -> str:
+        """Job boundary on ``name``'s active host: reclaim a departer,
+        complete a migration (moving the member to its target lane), or
+        commit staged changes."""
+        h = self.broker.active_host(name)
+        if h is None:
+            return "none"
+        key = (h, name)
+        res = self.broker.job_boundary(name, t=now)
+        if res == "reclaimed":
+            self.engine.jobs.pop(key, None)
+            self.next_release.pop(key, None)
+            # the departure may have started migrations; an idle source
+            # is at its boundary NOW (mirrors the idle-departer reclaim)
+            self._drain_idle_migrations(now)
+            self._lift_bounds()
+        elif res == "migrated":
+            nr = self.next_release.pop(key, now)
+            self.engine.jobs.pop(key, None)
+            dst = self.broker.active_host(name)
+            self.engine.jobs[(dst, name)] = None
+            self.next_release[(dst, name)] = max(nr, now)
+        return res
+
+    def _drain_idle_migrations(self, now: float) -> None:
+        progress = True
+        while progress:
+            progress = False
+            for name, mig in list(self.broker.migrating.items()):
+                key = (mig.src, name)
+                if key in self.engine.jobs and self.engine.jobs[key] is None:
+                    self._boundary(name, now)
+                    progress = True
+
+    def begin_step(self, now: float) -> None:
+        eng = self.engine
+        while (
+            self.ev_idx < len(self.pending)
+            and self.pending[self.ev_idx].time <= now + _EPS
+        ):
+            ev = self.pending[self.ev_idx]
+            self.ev_idx += 1
+            if ev.kind == "admit":
+                dec = self.broker.admit(ev.task, t=now)
+                if dec.admitted:
+                    h = dec.host
+                    self.admitted.append(ev.name)
+                    self.placements[ev.name] = h
+                    eng.jobs[(h, ev.name)] = None
+                    self.next_release[(h, ev.name)] = now
+                    # setdefault: a re-admission of a departed name must
+                    # extend its history, not erase the first residency
+                    self.responses.setdefault(ev.name, [])
+                    self.bounds.setdefault(ev.name, [])
+                    self.misses.setdefault(ev.name, 0)
+                    self.jobs_done.setdefault(ev.name, 0)
+                    self._lift_bounds()
+                else:
+                    self.rejected.append(ev.name)
+            elif ev.kind == "release":
+                h = self.broker.active_host(ev.name)
+                if self.broker.release(ev.name, t=now):
+                    if eng.jobs.get((h, ev.name)) is None:
+                        self._boundary(ev.name, now)   # idle: reclaim now
+                    self._drain_idle_migrations(now)
+                    self._lift_bounds()
+            else:
+                raise ValueError(f"unknown churn event kind {ev.kind!r}")
+
+    def release_jobs(self, now: float) -> None:
+        eng = self.engine
+        for key in list(eng.jobs):
+            h, name = key
+            ctl = self.broker.hosts[h]
+            if (
+                eng.jobs[key] is None
+                and not ctl.is_departing(name)
+                and self.next_release.get(key, math.inf) <= now + _EPS
+            ):
+                task = ctl.task(name)
+                eng.start_job(key, EngineJob(
+                    release=self.next_release[key],
+                    deadline_abs=self.next_release[key] + task.deadline,
+                    chain=task.chain(),
+                    durations=_sample_durations(
+                        task, 2 * ctl.allocation[name], self.rng,
+                        self.worst_case,
+                    ),
+                    bound=ctl.bound(name),
+                ))
+
+    def arbitration_order(self) -> list:
+        out = []
+        for h, ctl in enumerate(self.broker.hosts):
+            prio = {n: i for i, n in enumerate(ctl.order())}
+            members = [k for k in self.engine.jobs if k[0] == h]
+            members.sort(key=lambda k: prio.get(k[1], len(prio)))
+            out.extend(members)
+        return out
+
+    def next_external_time(self, now: float) -> float:
+        t = math.inf
+        for key, job in self.engine.jobs.items():
+            h, name = key
+            if job is None and not self.broker.hosts[h].is_departing(name):
+                t = min(t, self.next_release.get(key, math.inf))
+        if self.ev_idx < len(self.pending):
+            t = min(t, self.pending[self.ev_idx].time)
+        return t
+
+    def on_job_complete(self, key, job, now, response) -> None:
+        eng = self.engine
+        h, name = key
+        self.responses[name].append(response)
+        self.bounds[name].append(job.bound)
+        self.jobs_done[name] += 1
+        deadline = job.deadline_abs - job.release
+        eng.record("complete", key, response=response, bound=job.bound)
+        if response > deadline + 1e-6:
+            self.misses[name] += 1
+            eng.record("miss", key, overshoot=response - deadline)
+        eng.jobs[key] = None
+        self._boundary(name, now)   # reclaim / migrate / commit staged
+        h2 = self.broker.active_host(name)
+        if h2 is not None and (h2, name) in eng.jobs:
+            # still a fleet member (possibly on a new host): next sporadic
+            # release, with the post-boundary committed parameters
+            task = self.broker.hosts[h2].task(name)
+            gap = (
+                float(self.rng.uniform(0, 0.2 * task.period))
+                if self.release_jitter else 0.0
+            )
+            self.next_release[(h2, name)] = max(
+                job.release + task.period + gap, now
+            )
+
+
+def simulate_fleet(
+    events: Sequence[ChurnEvent],
+    n_hosts: int,
+    gn_per_host: int,
+    horizon: float,
+    seed: int = 0,
+    release_jitter: bool = True,
+    worst_case: bool = False,
+    tightened: bool = True,
+    placement: str = "least_loaded",
+    imbalance_threshold: float = 0.25,
+    max_migrations_per_event: int = 1,
+    engine: str = "batch",
+    broker: Optional[CapacityBroker] = None,
+    trace: Optional[EventTrace] = None,
+) -> FleetSimResult:
+    """Execute a churn trace across ``n_hosts`` broker-routed hosts."""
+    if broker is None:
+        broker = CapacityBroker.build(
+            n_hosts, gn_per_host,
+            trace=trace,
+            transition="boundary",
+            engine=engine,
+            tightened=tightened,
+            placement=placement,
+            imbalance_threshold=imbalance_threshold,
+            max_migrations_per_event=max_migrations_per_event,
+        )
+    for h, ctl in enumerate(broker.hosts):
+        if ctl.transition != "boundary":
+            # an instant controller reclaims mid-job, leaving the engine's
+            # membership pointing at entries the controller no longer knows
+            raise ValueError(
+                "simulate_fleet requires boundary-transition hosts "
+                f"(host {h} has transition={ctl.transition!r})"
+            )
+    policy = _FleetChurnPolicy(
+        events, broker, np.random.default_rng(seed), release_jitter,
+        worst_case,
+    )
+    DiscreteEventEngine(policy, trace=trace).run(horizon)
+    return FleetSimResult(
+        responses=policy.responses,
+        bounds=policy.bounds,
+        misses=policy.misses,
+        jobs=policy.jobs_done,
+        admitted=policy.admitted,
+        rejected=policy.rejected,
+        placements=policy.placements,
+        migrations=[
+            {"name": m.name, "src": m.src, "dst": m.dst, "t": m.started}
+            for m in broker.migration_log
+        ],
+        n_hosts=len(broker.hosts),
     )

@@ -1,22 +1,50 @@
-"""Online scheduling subsystem: dynamic admission, mode changes, telemetry.
+"""Online scheduling subsystem: a layered stack from slice ledger to fleet.
 
-controller.py   DynamicController — admit / release / update_rate with the
-                job-boundary mode-change protocol and warm-started
-                incremental re-allocation over Algorithm 2
-trace.py        EventTrace — scheduler event telemetry with Chrome
-                trace-event JSON export (chrome://tracing / Perfetto)
+capacity.py     Entry + SlicePool — the transactional slice-capacity
+                ledger (reserve / commit / reclaim, fork-and-adopt)
+certify.py      CertificationEngine — scalar / batched RTGPU certification
+                of transitional ledger states behind one interface
+controller.py   DynamicController — the job-boundary mode-change protocol
+                driving the ledger and a certification engine
+federation.py   CapacityBroker — multi-host federated admission over N
+                per-host controllers (pluggable placement, rejection
+                fallback, departure-imbalance migration)
+trace.py        EventTrace — scheduler event telemetry with host-tagged
+                Chrome trace-event JSON export (chrome://tracing /
+                Perfetto)
 
-The static front door (:class:`repro.runtime.AdmissionController`) is a
-thin wrapper over :class:`DynamicController` in instant-transition mode;
-the discrete-event simulator (:func:`repro.runtime.simulate_churn`)
-validates the online guarantees over whole churn traces.
+The static front door (:class:`repro.runtime.AdmissionController`) wraps
+:class:`DynamicController` (or a :class:`CapacityBroker`) in
+instant-transition mode; the discrete-event simulators
+(:func:`repro.runtime.simulate_churn`, :func:`repro.runtime.simulate_fleet`)
+validate the online guarantees over whole churn traces.
 """
+from .capacity import Entry, SlicePool
+from .certify import (
+    BatchCertifier,
+    CertificationEngine,
+    ScalarCertifier,
+    make_certifier,
+    transitional_vectors,
+)
 from .controller import DynamicController, SchedDecision
-from .trace import EventTrace, TraceEvent
+from .federation import BrokerDecision, CapacityBroker, Migration
+from .trace import EventTrace, HostTrace, TraceEvent
 
 __all__ = [
+    "Entry",
+    "SlicePool",
+    "CertificationEngine",
+    "ScalarCertifier",
+    "BatchCertifier",
+    "make_certifier",
+    "transitional_vectors",
     "DynamicController",
     "SchedDecision",
+    "CapacityBroker",
+    "BrokerDecision",
+    "Migration",
     "EventTrace",
+    "HostTrace",
     "TraceEvent",
 ]

@@ -1,0 +1,183 @@
+"""Transactional slice-capacity ledger (the bottom layer of the stack).
+
+One accelerator owns ``gn_total`` physical SM slices.  :class:`SlicePool`
+is the *ledger* of who holds how many: each resident task is one
+:class:`Entry` carrying its committed allocation plus any staged
+mode-change state (a staged task re-rate, or — reserved for staged
+boundary-mode re-allocation — a staged slice count).  The pool knows
+nothing about schedulability: certifying that a ledger state meets every
+deadline is :mod:`repro.sched.certify`'s job, and sequencing *when* staged
+state commits (the job-boundary protocol) is the controller's.
+
+**Fork-and-adopt transactionality.**  Every mutating decision runs against
+``pool.fork()`` — an independent copy of every entry — and only a
+*successful* decision ``adopt()``\\ s the fork back.  A rejected operation
+therefore leaves the ledger byte-identical (asserted via
+:meth:`fingerprint` in ``tests/test_sched.py``).  Entry insertion order is
+preserved across fork/adopt, which keeps deadline-monotonic priority
+sorting (a stable sort over ``entries()``) deterministic.
+
+**Envelope capacity.**  Until a transition commits, an entry holds
+``max(committed, staged)`` slices (``gn_hi``) — the mode-change protocol's
+safety invariant: capacity is never handed out while any job that was
+certified against it may still be in flight.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+from repro.core import RTTask
+
+__all__ = ["Entry", "SlicePool"]
+
+
+@dataclasses.dataclass
+class Entry:
+    """One resident task: committed state plus staged mode-change state.
+
+    ``staged_task`` is set by rate changes in boundary mode.
+    ``staged_alloc`` is reserved for staged boundary-mode re-allocation
+    (ROADMAP); nothing populates it yet, so ``gn_lo == gn_hi`` today."""
+
+    task: RTTask                        # committed parameters (jobs in flight)
+    alloc: int                          # committed GN (slices physically held)
+    staged_task: Optional[RTTask] = None
+    staged_alloc: Optional[int] = None
+    departing: bool = False
+
+    @property
+    def target_task(self) -> RTTask:
+        return self.staged_task if self.staged_task is not None else self.task
+
+    @property
+    def target_alloc(self) -> int:
+        return self.staged_alloc if self.staged_alloc is not None else self.alloc
+
+    @property
+    def trans_task(self) -> RTTask:
+        """Envelope task for transitional analysis: min(T), min(D).
+
+        Sound for any mix of old- and new-parameter jobs: min T upper-bounds
+        the task's interference on others, min D lower-bounds the deadline
+        its own response is checked against.  (min D ≤ min T always holds
+        when both configurations are individually constrained-deadline.)
+        """
+        if self.staged_task is None:
+            return self.task
+        return dataclasses.replace(
+            self.task,
+            period=min(self.task.period, self.staged_task.period),
+            deadline=min(self.task.deadline, self.staged_task.deadline),
+        )
+
+    @property
+    def gn_lo(self) -> int:
+        return min(self.alloc, self.target_alloc)
+
+    @property
+    def gn_hi(self) -> int:
+        return max(self.alloc, self.target_alloc)
+
+    @property
+    def in_transition(self) -> bool:
+        return self.staged_task is not None or self.staged_alloc is not None
+
+    def copy(self) -> "Entry":
+        return dataclasses.replace(self)
+
+    def commit(self) -> None:
+        """Job-boundary commit: staged parameters become the committed ones."""
+        self.task = self.target_task
+        self.alloc = self.target_alloc
+        self.staged_task = None
+        self.staged_alloc = None
+
+
+class SlicePool:
+    """The ledger: name → :class:`Entry` over ``gn_total`` slices."""
+
+    def __init__(self, gn_total: int):
+        self.gn_total = gn_total
+        self._entries: dict[str, Entry] = {}
+
+    # ---- views --------------------------------------------------------------
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self._entries)
+
+    def get(self, name: str) -> Optional[Entry]:
+        return self._entries.get(name)
+
+    def entries(self) -> list[Entry]:
+        """Entries in insertion order (the stable-sort tiebreak order)."""
+        return list(self._entries.values())
+
+    def items(self):
+        return self._entries.items()
+
+    @property
+    def allocation(self) -> dict[str, int]:
+        """Committed GN per resident task (slices physically held now)."""
+        return {n: e.alloc for n, e in self._entries.items()}
+
+    @property
+    def target_allocation(self) -> dict[str, int]:
+        """GN per task once every staged change commits."""
+        return {n: e.target_alloc for n, e in self._entries.items()}
+
+    @property
+    def capacity_in_use(self) -> int:
+        """Envelope capacity: committed and staged slices both count until
+        the transition commits (the protocol's safety invariant)."""
+        return sum(e.gn_hi for e in self._entries.values())
+
+    @property
+    def free_capacity(self) -> int:
+        return self.gn_total - self.capacity_in_use
+
+    def fingerprint(self) -> tuple:
+        """Hashable snapshot of the full ledger state."""
+        return tuple(sorted(
+            (n, e.alloc, e.target_alloc, e.departing, e.task, e.target_task)
+            for n, e in self._entries.items()
+        ))
+
+    # ---- transactions -------------------------------------------------------
+
+    def fork(self) -> "SlicePool":
+        """Independent copy of every entry; mutate freely, then
+        :meth:`adopt` on success or drop on rejection."""
+        child = SlicePool(self.gn_total)
+        child._entries = {n: e.copy() for n, e in self._entries.items()}
+        return child
+
+    def adopt(self, other: "SlicePool") -> None:
+        self._entries = other._entries
+
+    # ---- mutations ----------------------------------------------------------
+
+    def reserve(self, entry: Entry) -> None:
+        """Add a new resident (the admit commit step)."""
+        name = entry.task.name
+        if name in self._entries:
+            raise ValueError(f"name {name!r} already resident")
+        self._entries[name] = entry
+
+    def reclaim(self, name: str) -> Entry:
+        """Remove a resident, returning its slices to the pool."""
+        return self._entries.pop(name)
+
+    def mark_departing(self, name: str) -> bool:
+        """Flag ``name`` as departing (slices stay held until reclaim)."""
+        e = self._entries.get(name)
+        if e is None or e.departing:
+            return False
+        e.departing = True
+        return True

@@ -1,0 +1,304 @@
+"""Certification engines: RTGPU analysis of transitional ledger states.
+
+The middle layer of the scheduling stack.  Given a set of
+:class:`~repro.sched.capacity.Entry` ledger entries (committed + staged
+state), a certification engine answers one question — *does every task
+meet its deadline in every mode the transition can pass through?* — and
+produces the certified R̂ bound per task.  Three analysis paths hide
+behind one interface:
+
+  * the **scalar pinned loop**: per-task ``RtgpuIncremental`` analyses,
+    memoized on each task's complete interference context (shared by both
+    engines for rate changes and for small admission sweeps, where NumPy
+    dispatch constants dominate);
+  * the **batched sweep** (:class:`BatchCertifier`): every candidate GN of
+    an arrival certified in one vectorized
+    :class:`~repro.core.rta_batch.BatchAnalyzer` pass per (task, vector);
+  * the **re-allocation search**: Algorithm 2 warm-started with the
+    incumbent allocation (scalar DFS or breadth-wise frontier).
+
+**Transitional envelope.**  When any entry is mid-transition the set is
+certified at three allocation vectors — all-committed, all-target, and
+the mixed envelope (higher-priority interference at ``gn_hi``, own GPU
+segments at ``gn_lo``) — with each entry analyzed at its parameter
+envelope (``Entry.trans_task``: min T, min D).  Each task's certified
+bound is the max over the variants, so jobs of either epoch and jobs
+spanning the switch are all covered.  :func:`transitional_vectors` is the
+single source of truth for BOTH engines; scalar and batched certification
+are decision- and bound-identical (``tests/test_rta_batch.py``).
+
+The engines are *pure* with respect to controller state: they read and
+warm the caller-provided fork of the analysis tables / memo, and never
+touch the ledger — committing a certified state is the protocol layer's
+(:mod:`repro.sched.controller`) job.
+"""
+from __future__ import annotations
+
+import abc
+import math
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core import AnalysisTables, RTTask, TaskSet
+from repro.core.federated import FederatedResult, grid_search_dfs
+from repro.core.rta import RtgpuIncremental, bus_blocking
+from repro.core.rta_batch import BatchAnalyzer, grid_search_frontier
+
+from .capacity import Entry
+
+__all__ = [
+    "CertificationEngine",
+    "ScalarCertifier",
+    "BatchCertifier",
+    "make_certifier",
+    "transitional_vectors",
+]
+
+
+def transitional_vectors(
+    ordered: Sequence[Entry],
+) -> list[tuple[list[int], list[int]]]:
+    """Allocation vectors a transitional set is certified at — the single
+    source of truth for BOTH engines: the mixed envelope (hp interference
+    at gn_hi, own GPU at gn_lo) plus, when any entry is mid-transition,
+    the two pure vectors (all-committed, all-target)."""
+    vectors: list[tuple[list[int], list[int]]] = [
+        ([e.gn_hi for e in ordered], [e.gn_lo for e in ordered]),
+    ]
+    if any(e.in_transition for e in ordered):
+        vectors.append(([e.alloc for e in ordered],) * 2)
+        vectors.append(([e.target_alloc for e in ordered],) * 2)
+    return vectors
+
+
+class CertificationEngine(abc.ABC):
+    """One certification strategy over ledger entries.
+
+    All engines share the memoized scalar :meth:`certify` (the reference
+    path for full-set certification); they differ in how the *pinned
+    admission sweep* and the *re-allocation fallback* are evaluated.
+    """
+
+    name = "abstract"
+
+    def __init__(self, tightened: bool = True):
+        self.tightened = tightened
+
+    def certify(
+        self,
+        entries: Sequence[Entry],
+        tables: AnalysisTables,
+        memo: dict[tuple, float],
+        probe: Optional[str] = None,
+    ) -> tuple[Optional[dict[str, float]], int, str]:
+        """Full RTGPU analysis of the transitional set.
+
+        Returns ``(bounds, analyses, reason)``; ``bounds`` is None when
+        some task fails.  Per-task results are memoized on the complete
+        interference context — (higher-priority (task, GN) prefix, own
+        (task, GN), bus blocking from below) — so successive
+        certifications (e.g. the pinned admission loop, or re-certifying
+        after churn elsewhere in the set) only pay for tasks whose context
+        actually changed.  ``probe`` (usually the arrival — the marginal
+        task) is analyzed first so a failing candidate costs one analysis,
+        not a prefix sweep.
+        """
+        ordered = sorted(entries, key=lambda e: e.trans_task.deadline)
+        ts = TaskSet(tuple(e.trans_task for e in ordered))
+        inc = RtgpuIncremental(ts, tightened=self.tightened, tables=tables)
+        vectors = transitional_vectors(ordered)
+        # bus blocking below k (part of the memo key — analyze_task uses it)
+        n = len(ordered)
+        blocking = bus_blocking([e.trans_task for e in ordered])
+        bounds: dict[str, float] = {}
+        analyses = 0
+        indices = list(range(n))
+        if probe is not None:
+            for k in indices:
+                if ordered[k].task.name == probe:
+                    indices.remove(k)
+                    indices.insert(0, k)
+                    break
+        for k in indices:
+            e = ordered[k]
+            worst = 0.0
+            for interf_vec, self_vec in vectors:
+                key = (
+                    tuple(
+                        (ordered[i].trans_task, interf_vec[i]) for i in range(k)
+                    ),
+                    (e.trans_task, self_vec[k]),
+                    blocking[k],
+                )
+                r = memo.get(key)
+                if r is None:
+                    prefix = interf_vec[:k] + [self_vec[k]]
+                    ta = inc.analyze_task(k, prefix)
+                    analyses += 1
+                    r = ta.response if ta.schedulable else math.inf
+                    memo[key] = r
+                if not math.isfinite(r):
+                    return None, analyses, f"task {e.task.name!r} unschedulable"
+                worst = max(worst, r)
+            bounds[e.task.name] = worst
+        return bounds, analyses, ""
+
+    def _pinned_scalar(
+        self,
+        task: RTTask,
+        residents: Sequence[Entry],
+        tables: AnalysisTables,
+        memo: dict[tuple, float],
+        g_min: int,
+        free: int,
+    ) -> tuple[Optional[int], Optional[dict[str, float]], int]:
+        """Pinned admission, scalar: 1-D search over the arrival's GN only."""
+        residents = list(residents)
+        tried = 0
+        for g in range(g_min, free + 1):
+            cand = Entry(task=task, alloc=g)
+            tried += 1
+            bounds, _, _ = self.certify(residents + [cand], tables, memo,
+                                        probe=task.name)
+            if bounds is not None:
+                return g, bounds, tried
+        return None, None, tried
+
+    @abc.abstractmethod
+    def pinned_sweep(
+        self,
+        task: RTTask,
+        residents: Sequence[Entry],
+        tables: AnalysisTables,
+        memo: dict[tuple, float],
+        g_min: int,
+        free: int,
+    ) -> tuple[Optional[int], Optional[dict[str, float]], int]:
+        """Pinned admission: residents keep their slices, only the
+        arrival's GN ∈ [g_min, free] is searched.  Returns ``(smallest
+        feasible GN, certified bounds, candidates tried)`` or ``(None,
+        None, tried)`` when every candidate fails."""
+
+    @abc.abstractmethod
+    def realloc_search(
+        self,
+        ts: TaskSet,
+        gn_total: int,
+        max_nodes: int,
+        hint: Sequence[Optional[int]],
+        tables: AnalysisTables,
+    ) -> FederatedResult:
+        """Full Algorithm 2 re-allocation, warm-started with ``hint``."""
+
+
+class ScalarCertifier(CertificationEngine):
+    """The per-candidate reference path (memoized scalar loop + grid DFS)."""
+
+    name = "scalar"
+
+    def pinned_sweep(self, task, residents, tables, memo, g_min, free):
+        return self._pinned_scalar(task, residents, tables, memo, g_min, free)
+
+    def realloc_search(self, ts, gn_total, max_nodes, hint, tables):
+        return grid_search_dfs(
+            ts, gn_total, tightened=self.tightened,
+            max_nodes=max_nodes, hint=hint, tables=tables,
+        )
+
+
+class BatchCertifier(CertificationEngine):
+    """Vectorized certification: batched pinned sweep + frontier search.
+
+    Result-identical to :class:`ScalarCertifier` — the same transitional
+    vectors, the same per-task envelope maxima, the same smallest feasible
+    GN — but one vectorized sweep per (task, vector) instead of
+    ``O(free × n)`` scalar analyses.  Below ``min_work`` (candidate GNs ×
+    tasks analyzed) the memoized scalar loop's lower constant wins and the
+    sweep dispatches there adaptively; both produce identical decisions
+    and bounds.
+    """
+
+    name = "batch"
+
+    def __init__(self, tightened: bool = True, min_work: int = 128):
+        super().__init__(tightened=tightened)
+        self.min_work = min_work
+
+    def pinned_sweep(self, task, residents, tables, memo, g_min, free):
+        n_width = (free - g_min + 1) * (len(residents) + 1)
+        if n_width < self.min_work:
+            return self._pinned_scalar(task, residents, tables, memo,
+                                       g_min, free)
+        return self._pinned_batch(task, residents, tables, g_min, free)
+
+    def _pinned_batch(
+        self,
+        task: RTTask,
+        residents: Sequence[Entry],
+        tables: AnalysisTables,
+        g_min: int,
+        free: int,
+    ) -> tuple[Optional[int], Optional[dict[str, float]], int]:
+        """Batched pinned admission: certify every candidate GN at once."""
+        cand = Entry(task=task, alloc=g_min)
+        ordered = sorted(list(residents) + [cand],
+                         key=lambda e: e.trans_task.deadline)
+        a = ordered.index(cand)
+        ts = TaskSet(tuple(e.trans_task for e in ordered))
+        ana = BatchAnalyzer(ts, tightened=self.tightened, tables=tables)
+        vectors = transitional_vectors(ordered)
+        gs = np.arange(g_min, free + 1, dtype=np.int64)
+        n = len(ordered)
+        worst = np.zeros((gs.size, n))
+        alive = np.ones(gs.size, dtype=bool)
+        for interf_vec, self_vec in vectors:
+            for k in range(n):
+                if not alive.any():
+                    break
+                row = list(interf_vec[:k]) + [self_vec[k]]
+                if a > k:
+                    # prefix does not involve the arrival: one analysis
+                    da = ana.analyze_prefixes(
+                        k, np.asarray([row], dtype=np.int64), dedupe=False
+                    )
+                    r = (float(da.response[0])
+                         if bool(da.schedulable[0]) else math.inf)
+                    np.maximum(worst[:, k], r, out=worst[:, k])
+                    if not math.isfinite(r):
+                        alive[:] = False
+                else:
+                    idx = np.nonzero(alive)[0]
+                    prefix = np.tile(np.asarray(row, dtype=np.int64),
+                                     (idx.size, 1))
+                    prefix[:, a] = gs[idx]
+                    da = ana.analyze_prefixes(k, prefix)
+                    r = np.where(da.schedulable, da.response, math.inf)
+                    worst[idx, k] = np.maximum(worst[idx, k], r)
+                    alive[idx] &= np.isfinite(r)
+        sel = np.nonzero(alive)[0]
+        if sel.size == 0:
+            return None, None, int(gs.size)
+        w = int(sel[0])
+        bounds = {
+            ordered[k].task.name: float(worst[w, k]) for k in range(n)
+        }
+        return int(gs[w]), bounds, w + 1
+
+    def realloc_search(self, ts, gn_total, max_nodes, hint, tables):
+        return grid_search_frontier(
+            ts, gn_total, tightened=self.tightened,
+            max_nodes=max_nodes, hint=hint, tables=tables,
+        )
+
+
+def make_certifier(
+    engine: str, tightened: bool = True, min_work: int = 128
+) -> CertificationEngine:
+    """Engine factory: ``"batch"`` (default controller engine) or the
+    ``"scalar"`` reference path."""
+    if engine == "batch":
+        return BatchCertifier(tightened=tightened, min_work=min_work)
+    if engine == "scalar":
+        return ScalarCertifier(tightened=tightened)
+    raise ValueError(f"unknown analysis engine {engine!r}")

@@ -3,7 +3,17 @@
 The one-shot pipeline (Algorithm 2 → admit → run) assumed a frozen task
 set.  A serving cluster churns: model services arrive, depart, and change
 their request rate while admitted tasks keep hard deadlines.  This module
-turns the static machinery into an online scheduler built around two rules:
+is the *protocol layer* of the scheduling stack — it sequences WHEN state
+may change, delegating WHO holds capacity to the
+:class:`~repro.sched.capacity.SlicePool` ledger and WHETHER a state is
+safe to the :mod:`repro.sched.certify` engines:
+
+  capacity.py   transactional slice ledger (reserve / commit / reclaim,
+                fork-and-adopt transactions)
+  certify.py    CertificationEngine — scalar pinned loop, batched sweep,
+                transitional-envelope construction, realloc search
+  controller.py (this file) the job-boundary mode-change protocol
+  federation.py CapacityBroker — multi-host admission over N controllers
 
 **Mode-change protocol.**  Reconfiguration never touches a job in flight:
 
@@ -16,33 +26,28 @@ turns the static machinery into an online scheduler built around two rules:
     (Allocation re-balancing commits instantly and is therefore only
     offered by instant-transition front doors; staged boundary-mode
     re-allocation is a ROADMAP item — the ``staged_alloc`` envelope
-    plumbing below is ready for it but currently never populated;)
+    plumbing in capacity.py is ready for it but currently never
+    populated;)
   * an arrival is admitted only if the **transitional set** — active tasks,
     not-yet-reclaimed departers, stagers at their envelope of old/new
     parameters, plus the newcomer — passes the full RTGPU analysis, so no
-    admitted task can miss a deadline *during* reconfiguration.
-
-  Transitional certification analyzes every task at the envelope worst
-  case: its own GPU segments at ``min(old GN, new GN)`` virtual SMs (fewer
-  lanes → slower), interference from higher-priority tasks at
-  ``max(old GN, new GN)`` (more lanes → denser bus/CPU bursts), rate
-  stagers at ``min(T)``/``min(D)``, and additionally at both pure vectors
-  (all-old, all-new), taking the max response over the variants.
+    admitted task can miss a deadline *during* reconfiguration (see
+    :func:`repro.sched.certify.transitional_vectors` for the envelope).
 
 **Warm-start incremental re-allocation.**  Admission first tries the
 *pinned* path — every resident task keeps its slices and only the arrival's
 GN is searched — which costs O(free capacity) incremental analyses instead
 of a full grid search.  Only if that fails (and ``allow_realloc``) does it
-fall back to :func:`repro.core.federated.grid_search_dfs`, warm-started
-with the previous allocation as a ``hint`` and the persistent
+fall back to the full Algorithm 2 search, warm-started with the previous
+allocation as a ``hint`` and the persistent
 :class:`~repro.core.rta.AnalysisTables` view cache, so unchanged
 (task, GN) workload staircases are never rebuilt.  ``benchmarks/
 churn_acceptance.py`` measures the speedup versus the cold grid search.
 
-All mutating operations are transactional: the view cache is forked, and
-only a *successful* decision adopts the fork — a rejected ``admit()``
-leaves the controller state (allocation map, bounds, analysis cache)
-byte-identical, which ``tests/test_sched.py`` asserts.
+All mutating operations are transactional: the ledger and the view cache
+are forked, and only a *successful* decision adopts the forks — a rejected
+``admit()`` leaves the controller state (allocation map, bounds, analysis
+cache) byte-identical, which ``tests/test_sched.py`` asserts.
 
 **Batched certification (default).**  With ``engine="batch"`` the pinned
 admission sweep runs through :class:`repro.core.rta_batch.BatchAnalyzer`
@@ -60,19 +65,17 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional, Sequence
-
-import numpy as np
+from typing import Optional
 
 from repro.core import (
     AnalysisTables,
     RTTask,
     TaskSet,
 )
-from repro.core.federated import grid_search_dfs
-from repro.core.rta import RtgpuIncremental, bus_blocking
-from repro.core.rta_batch import BatchAnalyzer, grid_search_frontier
+from repro.core.rta import RtgpuIncremental, SetAnalysis
 
+from .capacity import Entry, SlicePool
+from .certify import make_certifier
 from .trace import EventTrace
 
 __all__ = ["SchedDecision", "DynamicController"]
@@ -90,61 +93,6 @@ class SchedDecision:
     reason: str = ""
     path: str = ""                           # "pinned" | "realloc" | "update"
     tried: int = 0                           # candidate vectors analyzed
-
-
-@dataclasses.dataclass
-class _Entry:
-    """One resident task: committed state plus staged mode-change state.
-
-    ``staged_task`` is set by rate changes in boundary mode.
-    ``staged_alloc`` is reserved for staged boundary-mode re-allocation
-    (ROADMAP); nothing populates it yet, so ``gn_lo == gn_hi`` today."""
-
-    task: RTTask                        # committed parameters (jobs in flight)
-    alloc: int                          # committed GN (slices physically held)
-    staged_task: Optional[RTTask] = None
-    staged_alloc: Optional[int] = None
-    departing: bool = False
-
-    @property
-    def target_task(self) -> RTTask:
-        return self.staged_task if self.staged_task is not None else self.task
-
-    @property
-    def target_alloc(self) -> int:
-        return self.staged_alloc if self.staged_alloc is not None else self.alloc
-
-    @property
-    def trans_task(self) -> RTTask:
-        """Envelope task for transitional analysis: min(T), min(D).
-
-        Sound for any mix of old- and new-parameter jobs: min T upper-bounds
-        the task's interference on others, min D lower-bounds the deadline
-        its own response is checked against.  (min D ≤ min T always holds
-        when both configurations are individually constrained-deadline.)
-        """
-        if self.staged_task is None:
-            return self.task
-        return dataclasses.replace(
-            self.task,
-            period=min(self.task.period, self.staged_task.period),
-            deadline=min(self.task.deadline, self.staged_task.deadline),
-        )
-
-    @property
-    def gn_lo(self) -> int:
-        return min(self.alloc, self.target_alloc)
-
-    @property
-    def gn_hi(self) -> int:
-        return max(self.alloc, self.target_alloc)
-
-    @property
-    def in_transition(self) -> bool:
-        return self.staged_task is not None or self.staged_alloc is not None
-
-    def copy(self) -> "_Entry":
-        return dataclasses.replace(self)
 
 
 class DynamicController:
@@ -170,8 +118,6 @@ class DynamicController:
     ):
         if transition not in ("boundary", "instant"):
             raise ValueError(f"unknown transition mode {transition!r}")
-        if engine not in ("batch", "scalar"):
-            raise ValueError(f"unknown analysis engine {engine!r}")
         self.gn_total = gn_total
         self.tightened = tightened
         self.transition = transition
@@ -184,15 +130,16 @@ class DynamicController:
         # reference path.  Decisions and certified bounds are identical
         # (tests/test_rta_batch.py replays churn traces on both).
         self.engine = engine
-        self._entries: dict[str, _Entry] = {}
+        self._certifier = make_certifier(
+            engine, tightened=tightened, min_work=self._BATCH_MIN_WORK
+        )
+        self._pool = SlicePool(gn_total)
         self._bounds: dict[str, float] = {}
         self._tables = AnalysisTables()
-        # Memoized per-task certification: key = the complete interference
-        # context of one analyze_task call — (prefix (task, GN) pairs, own
-        # (task, GN), bus blocking from below) — value = R̂ (inf when
-        # unschedulable).  Task k's analysis depends on nothing else, so a
-        # pinned admission re-analyzes only tasks at or below the arrival's
-        # priority; the untouched higher-priority prefix is a pure lookup.
+        # Memoized per-task certification, shared with the certifier: key =
+        # the complete interference context of one analyze_task call —
+        # (prefix (task, GN) pairs, own (task, GN), bus blocking from
+        # below) — value = R̂ (inf when unschedulable).
         self._memo: dict[tuple, float] = {}
         self.epoch = 0
 
@@ -218,24 +165,28 @@ class DynamicController:
     # ---- introspection ------------------------------------------------------
 
     @property
+    def pool(self) -> SlicePool:
+        """The slice ledger (read-only for external layers: the broker
+        inspects entries to pick migration candidates)."""
+        return self._pool
+
+    @property
     def allocation(self) -> dict[str, int]:
         """Committed GN per resident task (slices physically held now)."""
-        return {n: e.alloc for n, e in self._entries.items()}
+        return self._pool.allocation
 
     @property
     def target_allocation(self) -> dict[str, int]:
         """GN per task once every staged change commits."""
-        return {n: e.target_alloc for n, e in self._entries.items()}
+        return self._pool.target_allocation
 
     @property
     def capacity_in_use(self) -> int:
-        """Envelope capacity: committed and staged slices both count until
-        the transition commits (the protocol's safety invariant)."""
-        return sum(e.gn_hi for e in self._entries.values())
+        return self._pool.capacity_in_use
 
     @property
     def free_capacity(self) -> int:
-        return self.gn_total - self.capacity_in_use
+        return self._pool.free_capacity
 
     @property
     def tables(self) -> AnalysisTables:
@@ -255,133 +206,88 @@ class DynamicController:
         """Current fixed-priority order (deadline-monotonic over the
         transitional set; index 0 = highest priority)."""
         ordered = sorted(
-            self._entries.values(), key=lambda e: e.trans_task.deadline
+            self._pool.entries(), key=lambda e: e.trans_task.deadline
         )
         return [e.task.name for e in ordered]
 
     def is_departing(self, name: str) -> bool:
-        e = self._entries.get(name)
+        e = self._pool.get(name)
         return bool(e and e.departing)
 
+    def in_transition(self, name: str) -> bool:
+        e = self._pool.get(name)
+        return bool(e and e.in_transition)
+
     def task(self, name: str) -> Optional[RTTask]:
-        e = self._entries.get(name)
+        e = self._pool.get(name)
         return e.task if e else None
 
     def current_taskset(self) -> Optional[TaskSet]:
-        if not self._entries:
+        if not len(self._pool):
             return None
         return TaskSet.deadline_monotonic(
-            [e.task for e in self._entries.values()]
+            [e.task for e in self._pool.entries()]
         )
 
+    def set_analysis(self) -> Optional[SetAnalysis]:
+        """Per-task :class:`~repro.core.rta.TaskAnalysis` products for the
+        committed set at the committed allocation.
+
+        This is the analysis admission already certified, re-materialized
+        as full analysis objects: sharing the controller's warm view
+        tables makes it O(n) fixed points, not a cold re-analysis.  The
+        static :class:`repro.runtime.AdmissionController` wrapper attaches
+        this to its decisions instead of re-deriving the analysis itself.
+        """
+        ts = self.current_taskset()
+        if ts is None:
+            return None
+        alloc = self.allocation
+        alloc_list = [alloc[t.name] for t in ts]
+        inc = RtgpuIncremental(
+            ts, tightened=self.tightened, tables=self._tables
+        )
+        return SetAnalysis(tuple(
+            inc.analyze_task(k, alloc_list) for k in range(len(ts))
+        ))
+
     def fingerprint(self) -> tuple:
-        """Hashable snapshot of ALL mutable controller state — allocation
-        map, staged changes, bounds, departures, analysis cache, epoch."""
+        """Hashable snapshot of ALL mutable controller state — the ledger,
+        bounds, analysis caches, epoch."""
         return (
-            tuple(sorted(
-                (n, e.alloc, e.target_alloc, e.departing, e.task, e.target_task)
-                for n, e in self._entries.items()
-            )),
+            self._pool.fingerprint(),
             tuple(sorted(self._bounds.items())),
             self._tables.fingerprint(),
             frozenset(self._memo),
             self.epoch,
         )
 
-    # ---- transitional certification ----------------------------------------
-
-    @staticmethod
-    def _trans_vectors(
-        ordered: Sequence[_Entry],
-    ) -> list[tuple[list[int], list[int]]]:
-        """Allocation vectors a transitional set is certified at — the
-        single source of truth for BOTH engines: the mixed envelope (hp
-        interference at gn_hi, own GPU at gn_lo) plus, when any entry is
-        mid-transition, the two pure vectors (all-committed, all-target)."""
-        vectors: list[tuple[list[int], list[int]]] = [
-            ([e.gn_hi for e in ordered], [e.gn_lo for e in ordered]),
-        ]
-        if any(e.in_transition for e in ordered):
-            vectors.append(([e.alloc for e in ordered],) * 2)
-            vectors.append(([e.target_alloc for e in ordered],) * 2)
-        return vectors
-
-    def _certify(
-        self,
-        entries: Sequence[_Entry],
-        tables: AnalysisTables,
-        memo: dict[tuple, float],
-        probe: Optional[str] = None,
-    ) -> tuple[Optional[dict[str, float]], int, str]:
-        """Full RTGPU analysis of the transitional set.
-
-        Returns ``(bounds, analyses, reason)``; ``bounds`` is None when some
-        task fails.  When any entry is mid-transition the set is analyzed at
-        three vectors — all-committed, all-target, and the mixed envelope
-        (hp interference at gn_hi, own GPU at gn_lo) — and each task's
-        certified bound is the max over the variants, so jobs of either
-        epoch and jobs spanning the switch are all covered.
-
-        Per-task results are memoized on the complete interference context,
-        so successive certifications (e.g. the pinned admission loop, or
-        re-certifying after churn elsewhere in the set) only pay for tasks
-        whose context actually changed.
-        """
-        ordered = sorted(entries, key=lambda e: e.trans_task.deadline)
-        ts = TaskSet(tuple(e.trans_task for e in ordered))
-        inc = RtgpuIncremental(ts, tightened=self.tightened, tables=tables)
-        vectors = self._trans_vectors(ordered)
-        # bus blocking below k (part of the memo key — analyze_task uses it)
-        n = len(ordered)
-        blocking = bus_blocking([e.trans_task for e in ordered])
-        bounds: dict[str, float] = {}
-        analyses = 0
-        # analyze the probe (usually the arrival — the marginal task) first:
-        # a failing candidate then costs one analysis, not a prefix sweep
-        indices = list(range(n))
-        if probe is not None:
-            for k in indices:
-                if ordered[k].task.name == probe:
-                    indices.remove(k)
-                    indices.insert(0, k)
-                    break
-        for k in indices:
-            e = ordered[k]
-            worst = 0.0
-            for interf_vec, self_vec in vectors:
-                key = (
-                    tuple(
-                        (ordered[i].trans_task, interf_vec[i]) for i in range(k)
-                    ),
-                    (e.trans_task, self_vec[k]),
-                    blocking[k],
-                )
-                r = memo.get(key)
-                if r is None:
-                    prefix = interf_vec[:k] + [self_vec[k]]
-                    ta = inc.analyze_task(k, prefix)
-                    analyses += 1
-                    r = ta.response if ta.schedulable else math.inf
-                    memo[key] = r
-                if not math.isfinite(r):
-                    return None, analyses, f"task {e.task.name!r} unschedulable"
-                worst = max(worst, r)
-            bounds[e.task.name] = worst
-        return bounds, analyses, ""
-
     # ---- operations ---------------------------------------------------------
 
-    def admit(self, task: RTTask, t: float = 0.0) -> SchedDecision:
+    def admit(
+        self,
+        task: RTTask,
+        t: float = 0.0,
+        allow_realloc: Optional[bool] = None,
+        pinned: bool = True,
+    ) -> SchedDecision:
         """Admit ``task`` against the transitional set, or reject untouched.
 
         Pinned warm path first (residents keep their slices; only the
         arrival's GN is searched over reclaimed-free capacity), then the
-        warm-started full grid search if ``allow_realloc``.
+        warm-started full grid search if ``allow_realloc``.  The keywords
+        narrow (never widen) the constructor setting per call — the
+        :class:`~repro.sched.CapacityBroker` uses ``allow_realloc=False``
+        for its cheap first placement pass across hosts, then
+        ``pinned=False`` on the targeted second pass: rejection is
+        transactional, so a pinned sweep that failed in pass one would
+        fail identically and needn't be repeated before the re-balance
+        search.
         """
         name = task.name
         if not name:
             return self._reject(task, t, "task must have a name")
-        if name in self._entries:
+        if name in self._pool:
             return self._reject(task, t, f"name {name!r} already resident")
 
         free = self.free_capacity
@@ -393,42 +299,28 @@ class DynamicController:
         tried = 0
         fork = self._tables.fork()
         memo = dict(self._memo)
-        residents = [e.copy() for e in self._entries.values()]
+        pool = self._pool.fork()
+        residents = pool.entries()
 
-        if g_min is not None:
-            # The batched sweep amortizes with scale (candidates x resident
-            # tasks); below the crossover the memoized scalar loop's lower
-            # constant wins, and both produce identical decisions + bounds.
-            n_width = (free - g_min + 1) * (len(residents) + 1)
-            if self.engine == "batch" and n_width >= self._BATCH_MIN_WORK:
-                # pinned path, batched: every candidate GN certified in one
-                # vectorized sweep per task (identical decisions + bounds)
-                g_sel, bounds, tried = self._pinned_batch(
-                    task, residents, fork, g_min, free
-                )
-                if g_sel is not None:
-                    cand = _Entry(task=task, alloc=g_sel)
-                    return self._commit_admit(cand, bounds, fork, memo, t,
-                                              path="pinned", tried=tried)
-            else:
-                # pinned path: 1-D search over the arrival's GN only
-                for g in range(g_min, free + 1):
-                    cand = _Entry(task=task, alloc=g)
-                    tried += 1
-                    bounds, _, _ = self._certify(residents + [cand], fork,
-                                                 memo, probe=name)
-                    if bounds is not None:
-                        return self._commit_admit(cand, bounds, fork, memo, t,
-                                                  path="pinned", tried=tried)
+        if g_min is not None and pinned:
+            g_sel, bounds, tried = self._certifier.pinned_sweep(
+                task, residents, fork, memo, g_min, free
+            )
+            if g_sel is not None:
+                cand = Entry(task=task, alloc=g_sel)
+                return self._commit_admit(cand, bounds, pool, fork, memo, t,
+                                          path="pinned", tried=tried)
 
         # Full re-allocation only helps the *instant* front door: under the
         # boundary protocol a shrinking resident keeps max(old, new) slices
         # until its job boundary, so re-allocating can never hand an arrival
         # capacity the pinned path didn't already have.
+        realloc_ok = (self.allow_realloc if allow_realloc is None
+                      else self.allow_realloc and allow_realloc)
         realloc_ran = False
-        if self.allow_realloc and self.transition == "instant":
+        if realloc_ok and self.transition == "instant":
             dec, dfs_tried = self._admit_realloc(
-                task, residents, fork, memo, t, tried
+                task, pool, fork, memo, t, tried
             )
             if dec is not None:
                 return dec
@@ -447,88 +339,28 @@ class DynamicController:
             reason = "transitional set unschedulable under every candidate allocation"
         return self._reject(task, t, reason, tried=tried)
 
-    def _pinned_batch(
-        self,
-        task: RTTask,
-        residents: list[_Entry],
-        fork: AnalysisTables,
-        g_min: int,
-        free: int,
-    ) -> tuple[Optional[int], Optional[dict[str, float]], int]:
-        """Batched pinned admission: certify every candidate GN at once.
-
-        Result-identical to the scalar ``for g: _certify(...)`` loop — the
-        same transitional vectors, the same per-task envelope maxima, the
-        same smallest feasible GN — but one vectorized sweep per (task,
-        vector) instead of ``O(free × n)`` scalar analyses.  Returns
-        ``(selected GN, bounds, candidates tried)`` with ``(None, None,
-        free - g_min + 1)`` when every candidate fails.
-        """
-        cand = _Entry(task=task, alloc=g_min)
-        ordered = sorted(residents + [cand],
-                         key=lambda e: e.trans_task.deadline)
-        a = ordered.index(cand)
-        ts = TaskSet(tuple(e.trans_task for e in ordered))
-        ana = BatchAnalyzer(ts, tightened=self.tightened, tables=fork)
-        vectors = self._trans_vectors(ordered)
-        gs = np.arange(g_min, free + 1, dtype=np.int64)
-        n = len(ordered)
-        worst = np.zeros((gs.size, n))
-        alive = np.ones(gs.size, dtype=bool)
-        for interf_vec, self_vec in vectors:
-            for k in range(n):
-                if not alive.any():
-                    break
-                row = list(interf_vec[:k]) + [self_vec[k]]
-                if a > k:
-                    # prefix does not involve the arrival: one analysis
-                    da = ana.analyze_prefixes(
-                        k, np.asarray([row], dtype=np.int64), dedupe=False
-                    )
-                    r = (float(da.response[0])
-                         if bool(da.schedulable[0]) else math.inf)
-                    np.maximum(worst[:, k], r, out=worst[:, k])
-                    if not math.isfinite(r):
-                        alive[:] = False
-                else:
-                    idx = np.nonzero(alive)[0]
-                    prefix = np.tile(np.asarray(row, dtype=np.int64),
-                                     (idx.size, 1))
-                    prefix[:, a] = gs[idx]
-                    da = ana.analyze_prefixes(k, prefix)
-                    r = np.where(da.schedulable, da.response, math.inf)
-                    worst[idx, k] = np.maximum(worst[idx, k], r)
-                    alive[idx] &= np.isfinite(r)
-        sel = np.nonzero(alive)[0]
-        if sel.size == 0:
-            return None, None, int(gs.size)
-        w = int(sel[0])
-        bounds = {
-            ordered[k].task.name: float(worst[w, k]) for k in range(n)
-        }
-        return int(gs[w]), bounds, w + 1
-
     def _admit_realloc(
         self,
         task: RTTask,
-        residents: list[_Entry],
+        pool: SlicePool,
         fork: AnalysisTables,
         memo: dict[tuple, float],
         t: float,
         tried0: int,
     ) -> tuple[Optional[SchedDecision], int]:
-        """Warm-started full re-allocation (grid DFS with hint + tables).
+        """Warm-started full re-allocation (Algorithm 2 with hint + tables).
 
         Instant mode only: with no jobs in flight the whole allocation may
-        be re-balanced at once.  The DFS is seeded with the incumbent
-        allocation as its ``hint`` and shares the persistent view tables, so
-        a near-unchanged task set revalidates in O(n) analyses instead of
-        re-running Algorithm 2 from scratch.
+        be re-balanced at once.  The search is seeded with the incumbent
+        allocation as its ``hint`` and shares the persistent view tables,
+        so a near-unchanged task set revalidates in O(n) analyses instead
+        of re-running Algorithm 2 from scratch.
 
-        Returns ``(decision, dfs_nodes_tried)``; the node count is reported
+        Returns ``(decision, nodes_tried)``; the node count is reported
         even on failure so callers can tell a truncated search from an
         exhausted one."""
-        cand_entry = _Entry(task=task, alloc=0)
+        residents = pool.entries()
+        cand_entry = Entry(task=task, alloc=0)
         ordered = sorted(
             residents + [cand_entry], key=lambda e: e.trans_task.deadline
         )
@@ -536,11 +368,9 @@ class DynamicController:
         hint = [
             e.gn_hi if e is not cand_entry else None for e in ordered
         ]
-        search = (grid_search_frontier if self.engine == "batch"
-                  else grid_search_dfs)
-        fed = search(
-            ts, self.gn_total, tightened=self.tightened,
-            max_nodes=self.max_candidates, hint=hint, tables=fork,
+        fed = self._certifier.realloc_search(
+            ts, self.gn_total, max_nodes=self.max_candidates, hint=hint,
+            tables=fork,
         )
         if not fed.schedulable:
             return None, fed.candidates_tried
@@ -551,25 +381,23 @@ class DynamicController:
         cand_entry.alloc = new_gn[task.name]
         bounds = {ta.name: ta.response for ta in fed.analysis.tasks}
         return self._commit_admit(
-            cand_entry, bounds, fork, memo, t, path="realloc",
-            tried=tried0 + fed.candidates_tried, residents=residents,
+            cand_entry, bounds, pool, fork, memo, t, path="realloc",
+            tried=tried0 + fed.candidates_tried,
         ), fed.candidates_tried
 
     def _commit_admit(
         self,
-        cand: _Entry,
+        cand: Entry,
         bounds: dict[str, float],
+        pool: SlicePool,
         fork: AnalysisTables,
         memo: dict[tuple, float],
         t: float,
         path: str,
         tried: int,
-        residents: Optional[list[_Entry]] = None,
     ) -> SchedDecision:
-        if residents is not None:
-            for e in residents:
-                self._entries[e.task.name] = e
-        self._entries[cand.task.name] = cand
+        pool.reserve(cand)
+        self._pool.adopt(pool)
         self._bounds = bounds
         self._tables.adopt(fork)
         self._memo = memo
@@ -604,19 +432,19 @@ class DynamicController:
         its slices stay allocated (and it stays in every transitional
         analysis) until :meth:`job_boundary` reclaims them.  Instant mode
         reclaims immediately.  Removal never needs a schedulability test."""
-        e = self._entries.get(name)
+        e = self._pool.get(name)
         if e is None or e.departing:
             return False
         if self.transition == "instant":
             self._reclaim(name, t)
             return True
-        e.departing = True
+        self._pool.mark_departing(name)
         if self.trace is not None:
             self.trace.record(t, "depart", name, gn=e.alloc)
         return True
 
     def _reclaim(self, name: str, t: float) -> None:
-        e = self._entries.pop(name)
+        e = self._pool.reclaim(name)
         self._bounds.pop(name, None)
         self.epoch += 1
         if self.trace is not None:
@@ -628,17 +456,14 @@ class DynamicController:
         Returns ``"reclaimed"`` (departing task fully removed, slices back
         in the pool), ``"committed"`` (staged allocation / rate change took
         effect), or ``"none"``."""
-        e = self._entries.get(name)
+        e = self._pool.get(name)
         if e is None:
             return "none"
         if e.departing:
             self._reclaim(name, t)
             return "reclaimed"
         if e.in_transition:
-            e.task = e.target_task
-            e.alloc = e.target_alloc
-            e.staged_task = None
-            e.staged_alloc = None
+            e.commit()
             if self.trace is not None:
                 self.trace.record(t, "realloc", name, committed=e.alloc)
             return "committed"
@@ -653,7 +478,7 @@ class DynamicController:
         and new jobs can coexist); committed at the task's next job
         boundary (boundary mode) or immediately (instant mode).  Rejection
         leaves the old rate — and all controller state — untouched."""
-        e = self._entries.get(name)
+        e = self._pool.get(name)
         if e is None:
             return SchedDecision(False, None, None,
                                  reason=f"no resident task {name!r}")
@@ -667,7 +492,8 @@ class DynamicController:
         except ValueError as err:
             return SchedDecision(False, None, None, reason=str(err))
 
-        cands = [x.copy() for x in self._entries.values()]
+        pool = self._pool.fork()
+        cands = pool.entries()
         cand = next(c for c in cands if c.task.name == name)
         if self.transition == "instant":
             # no jobs span the switch: certify the pure new-parameter set
@@ -679,14 +505,15 @@ class DynamicController:
             cand.staged_task = new_task
         fork = self._tables.fork()
         memo = dict(self._memo)
-        bounds, analyses, reason = self._certify(cands, fork, memo, probe=name)
+        bounds, analyses, reason = self._certifier.certify(
+            cands, fork, memo, probe=name
+        )
         if bounds is None:
             return SchedDecision(
                 False, None, None, tried=analyses,
                 reason=f"rate change unschedulable: {reason}",
             )
-        for c in cands:
-            self._entries[c.task.name] = c
+        self._pool.adopt(pool)
         self._bounds = bounds
         self._tables.adopt(fork)
         self._memo = memo

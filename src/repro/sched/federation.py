@@ -1,0 +1,437 @@
+"""Multi-host federated admission: a capacity broker over per-host
+controllers.
+
+The paper's federated scheduling (Sec. 6) partitions ONE accelerator's
+virtual SMs among tasks; :class:`~repro.sched.DynamicController` does that
+online for a single host.  A serving fleet has N hosts, each with its own
+slice pool, CPU, and copy bus — so federation composes per host:
+:class:`CapacityBroker` routes every global operation (admit / release /
+rate change / job boundary) to per-host controllers, adding exactly three
+fleet-level concerns:
+
+**Placement.**  An arrival is offered to hosts in a pluggable order —
+``"first_fit"`` (host index order), ``"best_fit"`` (tightest feasible
+pool first, classic bin-packing), ``"least_loaded"`` (most free slices
+first, the load-balancing default), or any callable
+``(broker, task) -> host-index order``.  Each host runs its normal
+transitional-envelope admission; the first host that certifies the task
+wins.  A host's rejection is not the fleet's: the broker falls through to
+the next host in the order, so fleet admission only fails once *every*
+host has rejected.  Admission is two-pass — the cheap pinned sweep across
+all hosts first, the expensive re-allocation search only afterwards and
+only on the ``realloc_hosts`` most-promising hosts — so fleet-scale admit
+latency stays in the batched-certification regime
+(``benchmarks/federation_acceptance.py`` asserts it beats the single-host
+cold scalar path).
+
+**Departure-imbalance migration.**  When a departure reclaims capacity
+and leaves the fleet imbalanced (max load fraction − min load fraction >
+``imbalance_threshold``), the broker moves a task from the most- to the
+least-loaded host.  The move is certified end to end before anything
+changes, and executes entirely inside the mode-change protocol:
+
+  1. the task is **admitted on the target host** through the normal
+     transitional-envelope certification (if no allocation certifies, the
+     migration simply doesn't happen);
+  2. only then is it **released on the source host** — release-at-boundary:
+     its slices (and its transitional-analysis membership) stay on the
+     source until its in-flight job completes;
+  3. at that source job boundary the broker flips the task's *active*
+     host to the target (``job_boundary`` returns ``"migrated"``), and the
+     runtime releases all subsequent jobs there.
+
+  Between (2) and (3) the task is certified resident on BOTH hosts, so
+  whichever side a job runs on, its deadline is covered — no deadline can
+  be missed mid-migration (the hypothesis property in
+  ``tests/test_properties.py`` validates this over whole churn traces).
+
+**Fleet bookkeeping.**  Task names are fleet-unique; the broker tracks
+each task's *active* host (where its jobs run) and any in-flight
+migration.  ``repro.runtime.simulate_fleet`` drives one broker under the
+multi-host discrete-event simulator; ``benchmarks/federation_acceptance.py``
+tracks admit latency versus host count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional, Sequence, Union
+
+from repro.core import RTTask, TaskSet
+
+from .controller import DynamicController, SchedDecision
+from .trace import EventTrace
+
+__all__ = ["BrokerDecision", "CapacityBroker", "Migration",
+           "PLACEMENT_POLICIES"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BrokerDecision:
+    """Outcome of one fleet-level admission."""
+
+    admitted: bool
+    host: Optional[int]                    # admitting host index
+    decision: Optional[SchedDecision]      # that host's decision (or last)
+    tried_hosts: tuple[int, ...]           # hosts offered, in order
+    reason: str = ""
+
+    @property
+    def bounds(self) -> Optional[dict[str, float]]:
+        return self.decision.bounds if self.decision else None
+
+
+@dataclasses.dataclass(frozen=True)
+class Migration:
+    """One broker-driven move of ``name`` from host ``src`` to ``dst``.
+
+    ``started`` is the initiation time (target admitted, source released);
+    the move completes at the source job boundary."""
+
+    name: str
+    src: int
+    dst: int
+    started: float
+
+
+def _first_fit(broker: "CapacityBroker", task: RTTask) -> list[int]:
+    return list(range(len(broker.hosts)))
+
+
+def _best_fit(broker: "CapacityBroker", task: RTTask) -> list[int]:
+    # tightest pool first: minimize leftover free capacity (ties → index)
+    return sorted(range(len(broker.hosts)),
+                  key=lambda h: (broker.hosts[h].free_capacity, h))
+
+
+def _least_loaded(broker: "CapacityBroker", task: RTTask) -> list[int]:
+    # most free slices first: spread load (ties → index)
+    return sorted(range(len(broker.hosts)),
+                  key=lambda h: (-broker.hosts[h].free_capacity, h))
+
+
+PLACEMENT_POLICIES: dict[str, Callable] = {
+    "first_fit": _first_fit,
+    "best_fit": _best_fit,
+    "least_loaded": _least_loaded,
+}
+
+
+class CapacityBroker:
+    """Global admission + migration over per-host ``DynamicController``\\ s.
+
+    The broker mirrors the controller surface the runtime layers consume
+    (``admit`` / ``release`` / ``update_rate`` / ``job_boundary`` /
+    ``bound`` / ``task`` / ``is_departing``), so
+    :class:`repro.runtime.AdmissionController` and
+    :class:`repro.serving.ServingEngine` accept a broker wherever they
+    accepted a single controller.
+    """
+
+    def __init__(
+        self,
+        hosts: Sequence[DynamicController],
+        placement: Union[str, Callable] = "least_loaded",
+        migrate_on_departure: bool = True,
+        imbalance_threshold: float = 0.25,
+        max_migrations_per_event: int = 1,
+        realloc_hosts: int = 1,
+        trace: Optional[EventTrace] = None,
+    ):
+        if not hosts:
+            raise ValueError("broker needs at least one host")
+        if not callable(placement) and placement not in PLACEMENT_POLICIES:
+            raise ValueError(
+                f"unknown placement policy {placement!r} "
+                f"(known: {sorted(PLACEMENT_POLICIES)})"
+            )
+        self.hosts: tuple[DynamicController, ...] = tuple(hosts)
+        self.placement = placement
+        self.migrate_on_departure = migrate_on_departure
+        self.imbalance_threshold = imbalance_threshold
+        self.max_migrations_per_event = max_migrations_per_event
+        # second-pass budget: how many hosts may run the expensive full
+        # re-allocation search after every pinned placement failed
+        self.realloc_hosts = realloc_hosts
+        self.trace = trace
+        self._active: dict[str, int] = {}          # name -> active host
+        self._migrations: dict[str, Migration] = {}  # in-flight moves
+        self.migration_log: list[Migration] = []     # completed moves
+
+    @classmethod
+    def build(
+        cls,
+        n_hosts: int,
+        gn_per_host: int,
+        *,
+        trace: Optional[EventTrace] = None,
+        transition: str = "boundary",
+        engine: str = "batch",
+        tightened: bool = True,
+        allow_realloc: bool = True,
+        max_candidates: int = 2000,
+        **broker_kw,
+    ) -> "CapacityBroker":
+        """Fleet of ``n_hosts`` identical hosts; controller events are
+        recorded host-tagged into ``trace`` (one Chrome lane group per
+        host)."""
+        hosts = [
+            DynamicController(
+                gn_per_host,
+                tightened=tightened,
+                transition=transition,
+                allow_realloc=allow_realloc,
+                max_candidates=max_candidates,
+                trace=trace.for_host(h) if trace is not None else None,
+                engine=engine,
+            )
+            for h in range(n_hosts)
+        ]
+        return cls(hosts, trace=trace, **broker_kw)
+
+    # ---- fleet introspection ------------------------------------------------
+
+    @property
+    def n_hosts(self) -> int:
+        return len(self.hosts)
+
+    @property
+    def allocation(self) -> dict[str, int]:
+        """Committed GN per task, fleet-wide (names are fleet-unique)."""
+        out: dict[str, int] = {}
+        for ctl in self.hosts:
+            out.update(ctl.allocation)
+        return out
+
+    @property
+    def capacity_in_use(self) -> int:
+        return sum(ctl.capacity_in_use for ctl in self.hosts)
+
+    @property
+    def free_capacity(self) -> int:
+        return sum(ctl.free_capacity for ctl in self.hosts)
+
+    @property
+    def migrating(self) -> dict[str, Migration]:
+        return dict(self._migrations)
+
+    def load(self, h: int) -> float:
+        """Envelope load fraction of host ``h``."""
+        ctl = self.hosts[h]
+        return ctl.capacity_in_use / ctl.gn_total
+
+    def active_host(self, name: str) -> Optional[int]:
+        """Host whose slices ``name``'s jobs currently run on."""
+        return self._active.get(name)
+
+    def host_of(self, name: str) -> Optional[int]:
+        return self._active.get(name)
+
+    def bounds(self) -> dict[str, float]:
+        """Certified R̂ per task on its *active* host."""
+        return {
+            name: self.hosts[h].bound(name)
+            for name, h in self._active.items()
+        }
+
+    def bound(self, name: str) -> float:
+        h = self._active.get(name)
+        return self.hosts[h].bound(name) if h is not None else math.inf
+
+    def task(self, name: str) -> Optional[RTTask]:
+        h = self._active.get(name)
+        return self.hosts[h].task(name) if h is not None else None
+
+    def is_departing(self, name: str) -> bool:
+        """True when ``name`` is departing the *fleet* (a migration's
+        source-side departure is not a fleet departure)."""
+        h = self._active.get(name)
+        if h is None:
+            return False
+        return self.hosts[h].is_departing(name) and name not in self._migrations
+
+    def current_taskset(self) -> Optional[TaskSet]:
+        tasks = [t for ctl in self.hosts
+                 for t in (ctl.current_taskset() or ())]
+        if not tasks:
+            return None
+        return TaskSet.deadline_monotonic(tasks)
+
+    # ---- operations ---------------------------------------------------------
+
+    def _placement_order(self, task: RTTask) -> list[int]:
+        fn = self.placement if callable(self.placement) \
+            else PLACEMENT_POLICIES[self.placement]
+        return list(fn(self, task))
+
+    def admit(self, task: RTTask, t: float = 0.0) -> BrokerDecision:
+        """Offer ``task`` to hosts in placement order; first certifying
+        host wins.  Rejected by all → the fleet rejects, every host's
+        state untouched (per-host transactionality).
+
+        Admission is **two-pass**: the first pass runs only each host's
+        cheap pinned sweep (``allow_realloc=False``) in placement order;
+        only if every host pinned-rejects does the second pass run the
+        expensive full re-allocation search, bounded to the
+        ``realloc_hosts`` most-promising hosts (most free capacity — for
+        identical hosts, if re-balancing cannot fit the task there it
+        cannot fit anywhere).  This keeps the common fleet admission at
+        O(hosts × pinned) instead of O(hosts × grid search)."""
+        name = task.name
+        if name and name in self._active:
+            return BrokerDecision(
+                False, None, None, (),
+                reason=f"name {name!r} already resident in the fleet",
+            )
+        order = self._placement_order(task)
+        tried: list[int] = []
+        last: Optional[SchedDecision] = None
+        for h in order:
+            dec = self.hosts[h].admit(task, t=t, allow_realloc=False)
+            tried.append(h)
+            last = dec
+            if dec.admitted:
+                self._active[name] = h
+                return BrokerDecision(True, h, dec, tuple(tried))
+        realloc_order = [
+            h for h in sorted(
+                order, key=lambda h: (-self.hosts[h].free_capacity, h)
+            )
+            if self.hosts[h].transition == "instant"
+            and self.hosts[h].allow_realloc
+        ][: self.realloc_hosts]
+        for h in realloc_order:
+            # pass 1's pinned rejection was transactional, so repeating the
+            # sweep would fail identically: go straight to the re-balance
+            dec = self.hosts[h].admit(task, t=t, pinned=False)
+            last = dec
+            if dec.admitted:
+                self._active[name] = h
+                return BrokerDecision(True, h, dec, tuple(tried))
+        reason = (
+            f"rejected by all {len(tried)} hosts"
+            + (f" (last: {last.reason})" if last is not None else "")
+        )
+        return BrokerDecision(False, None, last, tuple(tried), reason=reason)
+
+    def release(self, name: str, t: float = 0.0) -> bool:
+        """Depart ``name`` from the fleet (release-at-boundary on its
+        active host).  A task mid-migration departs from both sides: the
+        idle copy parked on the target is reclaimed immediately, the
+        active source copy at its job boundary."""
+        h = self._active.get(name)
+        if h is None:
+            return False
+        mig = self._migrations.pop(name, None)
+        if mig is not None:
+            dst = self.hosts[mig.dst]
+            dst.release(name, t=t)
+            dst.job_boundary(name, t=t)   # no jobs ever ran there: boundary now
+            # the source side is ALREADY departing (release-at-boundary was
+            # issued when the migration started), so with the migration
+            # record gone its boundary now reclaims as a fleet departure
+            self.hosts[h].release(name, t=t)
+            return True
+        ok = self.hosts[h].release(name, t=t)
+        if ok and name not in self.hosts[h].pool:
+            # instant-transition host: reclaimed at once — the departure
+            # imbalance (if any) exists now
+            del self._active[name]
+            if self.migrate_on_departure:
+                self._rebalance(t)
+        return ok
+
+    def update_rate(
+        self, name: str, period: float, deadline: float, t: float = 0.0
+    ) -> SchedDecision:
+        h = self._active.get(name)
+        if h is None:
+            return SchedDecision(False, None, None,
+                                 reason=f"no resident task {name!r}")
+        mig = self._migrations.get(name)
+        if mig is not None:
+            # mid-migration: the source copy is departing (it finishes at
+            # most one more job at the old, still-certified rate), so the
+            # rate change lands on the migration target — the task's home
+            # for every job after the source boundary
+            return self.hosts[mig.dst].update_rate(name, period, deadline,
+                                                   t=t)
+        return self.hosts[h].update_rate(name, period, deadline, t=t)
+
+    def job_boundary(self, name: str, t: float = 0.0) -> str:
+        """Runtime hook: ``name`` completed a job on its active host.
+
+        Beyond the per-host outcomes (``"committed"`` / ``"none"``), the
+        broker distinguishes ``"migrated"`` (the source side of an
+        in-flight migration reclaimed: the task's active host flipped to
+        the target) from ``"reclaimed"`` (a true fleet departure, which
+        may trigger departure-imbalance migrations)."""
+        h = self._active.get(name)
+        if h is None:
+            return "none"
+        res = self.hosts[h].job_boundary(name, t=t)
+        if res != "reclaimed":
+            return res
+        mig = self._migrations.pop(name, None)
+        if mig is not None:
+            self._active[name] = mig.dst
+            self.migration_log.append(mig)
+            return "migrated"
+        del self._active[name]
+        if self.migrate_on_departure:
+            self._rebalance(t)
+        return "reclaimed"
+
+    # ---- departure-imbalance migration --------------------------------------
+
+    def _rebalance(self, t: float) -> None:
+        for _ in range(self.max_migrations_per_event):
+            if not self._start_one_migration(t):
+                break
+
+    def _migration_candidates(self, src: int) -> list:
+        """Movable entries on ``src``: not departing, not mid-transition,
+        not already migrating — smallest slice holdings first (cheapest to
+        re-place; ties broken by name for determinism)."""
+        return sorted(
+            (e for n, e in self.hosts[src].pool.items()
+             if not e.departing and not e.in_transition
+             and n not in self._migrations),
+            key=lambda e: (e.gn_hi, e.task.name),
+        )
+
+    def _start_one_migration(self, t: float) -> bool:
+        n = len(self.hosts)
+        if n < 2:
+            return False
+        loads = [self.load(h) for h in range(n)]
+        src = max(range(n), key=lambda h: loads[h])
+        dst = min(range(n), key=lambda h: loads[h])
+        if src == dst or loads[src] - loads[dst] <= self.imbalance_threshold:
+            return False
+        src_ctl, dst_ctl = self.hosts[src], self.hosts[dst]
+        for e in self._migration_candidates(src):
+            name = e.task.name
+            # a move that would just flip the imbalance is no move at all
+            gain = e.gn_hi / src_ctl.gn_total
+            if loads[src] - gain < loads[dst] + e.gn_hi / dst_ctl.gn_total \
+                    - self.imbalance_threshold:
+                continue
+            dec = dst_ctl.admit(e.task, t=t)   # envelope-certified, or skip
+            if not dec.admitted:
+                continue
+            src_ctl.release(name, t=t)         # release-at-boundary
+            mig = Migration(name=name, src=src, dst=dst, started=t)
+            if self.trace is not None:
+                self.trace.record(t, "migrate", name, src=src, dst=dst,
+                                  gn=dec.alloc[name] if dec.alloc else None,
+                                  host=src)
+            if name not in src_ctl.pool:
+                # instant-transition source: reclaimed at once — the
+                # migration completes immediately
+                self._active[name] = dst
+                self.migration_log.append(mig)
+            else:
+                self._migrations[name] = mig
+            return True
+        return False

@@ -14,6 +14,16 @@ instant events for everything else.  Deadline misses become flow-less
 instant events with the overshoot attached, so a miss is one click away
 from the preemptions that caused it.
 
+**Multi-host traces.**  An event whose meta carries ``host=<int>`` is
+attributed to that host: the Chrome export derives ``pid`` from it
+(``host + 1``) with one ``process_name`` lane group per host, so a fleet
+trace renders host-by-host.  :meth:`EventTrace.for_host` returns a scoped
+recorder that injects the ``host`` key into every event — per-host
+controllers in a :class:`~repro.sched.CapacityBroker` each record through
+one.  Traces with no ``host`` meta (the single-host default) export
+byte-identically to the pre-federation format (``pid`` 1, one process
+row).
+
 Besides the (lossy, render-oriented) Chrome export, traces round-trip
 losslessly through a native JSON form: ``to_json``/``from_json`` (objects)
 and ``save``/``load`` (files) preserve every event verbatim, which is what
@@ -28,15 +38,16 @@ import dataclasses
 import json
 from typing import Iterable, Optional
 
-__all__ = ["TraceEvent", "EventTrace"]
+__all__ = ["TraceEvent", "EventTrace", "HostTrace"]
 
 #: kinds that open/close a job duration slice in the Chrome export
 _JOB_BEGIN = "release"
 _JOB_END = "complete"
 
-#: every kind the runtime layers emit (documented contract, not enforced)
+#: every kind the runtime layers emit (documented contract, not enforced);
+#: "migrate" is the broker's departure-imbalance move instant
 KINDS = (
-    "admit", "reject", "depart", "reclaim", "update", "realloc",
+    "admit", "reject", "depart", "reclaim", "update", "realloc", "migrate",
     "release", "start", "preempt", "resume", "complete", "miss",
 )
 
@@ -84,6 +95,11 @@ class EventTrace:
         )
         self.events.append(ev)
         return ev
+
+    def for_host(self, host: int) -> "HostTrace":
+        """Scoped recorder appending to THIS trace with ``host=<host>``
+        injected into every event's meta (one Chrome lane group per host)."""
+        return HostTrace(self, host)
 
     def __len__(self) -> int:
         return len(self.events)
@@ -185,23 +201,42 @@ class EventTrace:
             else _JOB_BEGIN
         )
         rows: list[dict] = []
-        tids: dict[str, int] = {}
+        tids: dict[tuple[int, str], int] = {}
+        next_tid: dict[int, int] = {}
 
-        def tid(task: str) -> int:
-            if task not in tids:
-                tids[task] = len(tids) + 1
+        def pid_of(meta: dict) -> int:
+            # host h renders as process h+1; un-tagged events stay on pid 1
+            # (the pre-federation layout, byte-identical for such traces)
+            return int(meta.get("host", 0)) + 1
+
+        def tid(pid: int, task: str) -> int:
+            key = (pid, task)
+            if key not in tids:
+                next_tid[pid] = next_tid.get(pid, 0) + 1
+                tids[key] = next_tid[pid]
                 rows.append({
-                    "name": "thread_name", "ph": "M", "pid": 1,
-                    "tid": tids[task], "args": {"name": task},
+                    "name": "thread_name", "ph": "M", "pid": pid,
+                    "tid": tids[key], "args": {"name": task},
                 })
-            return tids[task]
+            return tids[key]
 
-        rows.append({"name": "process_name", "ph": "M", "pid": 1,
-                     "args": {"name": self.label}})
+        hosts = sorted({
+            int(dict(ev.meta)["host"]) for ev in self.events
+            if "host" in dict(ev.meta)
+        })
+        if hosts:
+            for h in hosts:
+                rows.append({"name": "process_name", "ph": "M", "pid": h + 1,
+                             "args": {"name": f"{self.label}/host{h}"}})
+        else:
+            rows.append({"name": "process_name", "ph": "M", "pid": 1,
+                         "args": {"name": self.label}})
         for ev in self.events:
             ts = ev.t * self.us_per_unit
-            base = {"pid": 1, "tid": tid(ev.task), "ts": ts,
-                    "cat": "sched", "args": dict(ev.meta)}
+            meta = dict(ev.meta)
+            pid = pid_of(meta)
+            base = {"pid": pid, "tid": tid(pid, ev.task), "ts": ts,
+                    "cat": "sched", "args": meta}
             if ev.kind == begin_kind:
                 rows.append({**base, "name": f"{ev.task} job", "ph": "B"})
             elif ev.kind == _JOB_END:
@@ -214,3 +249,27 @@ class EventTrace:
         with open(path, "w") as fh:
             json.dump(self.to_chrome(), fh, indent=None, separators=(",", ":"))
         return path
+
+
+class HostTrace:
+    """Host-scoped view of an :class:`EventTrace` (see
+    :meth:`EventTrace.for_host`).
+
+    Duck-types the recording surface the producers use (``record``), so a
+    per-host :class:`~repro.sched.DynamicController` can be handed one in
+    place of the shared trace; every event lands in the parent trace with
+    ``host`` stamped into its meta.  An explicit ``host=`` keyword from
+    the producer wins (the broker records cross-host events like
+    ``migrate`` that way)."""
+
+    def __init__(self, parent: EventTrace, host: int):
+        self.parent = parent
+        self.host = int(host)
+
+    def record(self, t: float, kind: str, task: str, **meta) -> TraceEvent:
+        meta.setdefault("host", self.host)
+        return self.parent.record(t, kind, task, **meta)
+
+    @property
+    def events(self) -> list[TraceEvent]:
+        return self.parent.events

@@ -40,11 +40,13 @@ class ServingEngine:
     """One model, fixed batch slots, continuous decode.
 
     Optionally registers with the online scheduler: ``rt_register`` asks a
-    :class:`repro.sched.DynamicController` to admit this engine's periodic
-    decode service (converted to an RTGPU task via the roofline-derived
-    chain in ``repro.runtime.task_spec``), and ``rt_deregister`` departs
-    through the mode-change protocol (slices reclaimed at the job
-    boundary, never mid-request).
+    :class:`repro.sched.DynamicController` — or a fleet-level
+    :class:`repro.sched.CapacityBroker`, which places the service on
+    whichever host certifies it — to admit this engine's periodic decode
+    service (converted to an RTGPU task via the roofline-derived chain in
+    ``repro.runtime.task_spec``), and ``rt_deregister`` departs through
+    the mode-change protocol (slices reclaimed at the job boundary, never
+    mid-request).
     """
 
     def __init__(self, cfg: ModelConfig, serve: ServeConfig, params=None,
@@ -81,14 +83,16 @@ class ServingEngine:
 
     def rt_register(self, controller, spec, t: float = 0.0):
         """Admit this engine as an RT service on ``controller``
-        (:class:`repro.sched.DynamicController` or the static
+        (:class:`repro.sched.DynamicController`, a multi-host
+        :class:`repro.sched.CapacityBroker`, or the static
         :class:`repro.runtime.AdmissionController`).  Returns the
-        controller's decision; on success the engine remembers its
-        registration for :meth:`rt_deregister`."""
+        controller's decision (a ``BrokerDecision`` names the placed host
+        for brokers); on success the engine remembers its registration for
+        :meth:`rt_deregister`."""
         from repro.runtime.task_spec import serving_task_to_rt
 
         task = serving_task_to_rt(spec)
-        if hasattr(controller, "job_boundary"):   # online controller: clocked
+        if hasattr(controller, "job_boundary"):   # online ctl/broker: clocked
             dec = controller.admit(task, t=t)
         else:                                     # static wrapper front door
             dec = controller.admit(task)

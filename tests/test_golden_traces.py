@@ -34,7 +34,8 @@ GOLDEN_DIR = Path(__file__).parent / "golden"
 GOLDEN_FILES = sorted(GOLDEN_DIR.glob("*.json"))
 
 #: regimes the corpus must span (ISSUE acceptance: ≥6 scenarios covering
-#: steady, churn, bus-saturated, and near-critical utilization)
+#: steady, churn, bus-saturated, near-critical utilization, and the
+#: multi-host broker-routed fleet path)
 REQUIRED_SCENARIOS = (
     "steady",
     "steady_worst_case",
@@ -43,6 +44,7 @@ REQUIRED_SCENARIOS = (
     "churn_steady",
     "churn_heavy",
     "churn_worst_case",
+    "fleet_churn",
 )
 
 

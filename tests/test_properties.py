@@ -12,7 +12,11 @@ not just the seeds the example tests happen to draw:
   * admission verdicts are deterministic: identical controllers fed
     identical sequences decide identically, and a rejected admit retried
     on the *same* controller returns the identical decision (the
-    transactional-rejection contract).
+    transactional-rejection contract);
+  * migration safety: after ANY broker-driven migration sequence in the
+    multi-host churn simulator, every resident task's observed response
+    stays ≤ the R̂ certified for the host it ran on — no deadline can be
+    missed mid-migration (ISSUE 4 acceptance).
 
 Each property is phrased as a plain ``_check_*`` helper so it can also be
 driven directly (without hypothesis) for debugging a failing example.
@@ -26,8 +30,15 @@ pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 
-from repro.core import GeneratorConfig, TaskSet, generate_taskset
+from repro.core import (
+    ChurnConfig,
+    GeneratorConfig,
+    TaskSet,
+    generate_churn_trace,
+    generate_taskset,
+)
 from repro.core.rta import RtgpuIncremental
+from repro.runtime import simulate_fleet
 from repro.sched import DynamicController
 
 _TOL = 1e-9
@@ -164,3 +175,51 @@ def _check_admission_deterministic(seed, util, gn_total):
           suppress_health_check=[HealthCheck.too_slow])
 def test_admission_verdicts_deterministic(seed, util, gn_total):
     _check_admission_deterministic(seed, util, gn_total)
+
+
+# ---- property 4: migration safety (broker-driven moves keep R ≤ R̂) ----------
+
+
+def _check_fleet_migration_safe(seed, n_hosts, gn_per_host, placement,
+                                threshold):
+    """Whatever migration sequence the broker chooses for this draw, every
+    completed job on every host observes R ≤ the R̂ certified for the host
+    it executed on — including jobs released while their task's residency
+    spanned both migration endpoints."""
+    events = generate_churn_trace(
+        seed=seed, horizon=3000.0,
+        config=ChurnConfig(mean_interarrival=180.0,
+                           lifetime_range=(600.0, 2000.0)),
+    )
+    res = simulate_fleet(
+        events, n_hosts, gn_per_host, horizon=3500.0, seed=seed,
+        placement=placement, imbalance_threshold=threshold,
+        max_migrations_per_event=2,
+    )
+    assert not res.any_miss, (
+        f"deadline misses after migrations {res.migrations}: {res.misses}"
+    )
+    assert res.bound_violations() == [], (
+        f"bound violations after migrations {res.migrations}"
+    )
+    # migrations are real moves between distinct hosts of resident tasks
+    for m in res.migrations:
+        assert m["src"] != m["dst"]
+        assert m["name"] in res.admitted
+    return len(res.migrations)
+
+
+@given(
+    seed=st.integers(0, 10_000),
+    n_hosts=st.integers(2, 4),
+    gn_per_host=st.integers(4, 8),
+    placement=st.sampled_from(["least_loaded", "best_fit", "first_fit"]),
+    threshold=st.sampled_from([0.15, 0.25, 0.4]),
+)
+@settings(max_examples=8, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_fleet_migrations_never_violate_certified_bounds(
+    seed, n_hosts, gn_per_host, placement, threshold
+):
+    _check_fleet_migration_safe(seed, n_hosts, gn_per_host, placement,
+                                threshold)
