@@ -40,6 +40,7 @@ def main(argv=None) -> int:
         fig4_kernel_scaling,
         fig6_interleave,
         fig12_system_validation,
+        preemption_acceptance,
         roofline_table,
         rta_throughput,
         sched_acceptance,
@@ -55,6 +56,7 @@ def main(argv=None) -> int:
     stage("churn", churn_acceptance.run, rows)
     stage("rta", rta_throughput.run, rows)
     stage("federation", federation_acceptance.run, rows)
+    stage("preemption", preemption_acceptance.run, rows)
     stage("roofline", roofline_table.run, rows)
     stage("roofline_multipod", roofline_table.run, rows, mesh="2x16x16")
 

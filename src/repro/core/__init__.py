@@ -16,6 +16,7 @@ from .task import GpuSegment, RTTask, SegmentKind, TaskSet, gpu_response_bounds
 from .workload import (
     ResourceView,
     cpu_view,
+    gpu_view,
     max_workload,
     mem_view,
     suspension_oblivious_view,
@@ -23,6 +24,7 @@ from .workload import (
 )
 from .rta import (
     AnalysisTables,
+    PreemptionModel,
     SetAnalysis,
     TaskAnalysis,
     analyze_rtgpu,
@@ -69,10 +71,12 @@ __all__ = [
     "ResourceView",
     "cpu_view",
     "mem_view",
+    "gpu_view",
     "suspension_oblivious_view",
     "workload_fn",
     "max_workload",
     "AnalysisTables",
+    "PreemptionModel",
     "SetAnalysis",
     "TaskAnalysis",
     "analyze_rtgpu",

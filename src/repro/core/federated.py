@@ -23,6 +23,7 @@ from typing import Callable, Iterator, Optional, Sequence
 
 from .rta import (
     AnalysisTables,
+    PreemptionModel,
     RtgpuIncremental,
     SetAnalysis,
     TaskAnalysis,
@@ -107,6 +108,7 @@ def grid_search_dfs(
     max_nodes: int = 1_000_000,
     hint: Optional[Sequence[Optional[int]]] = None,
     tables: Optional[AnalysisTables] = None,
+    preemption: "PreemptionModel | str | None" = None,
 ) -> FederatedResult:
     """Algorithm 2 for the RTGPU analysis, with prefix pruning.
 
@@ -127,7 +129,8 @@ def grid_search_dfs(
     if mins is None:
         return FederatedResult(False, None, None, 0)
     suffix = _suffix_mins(mins)
-    inc = RtgpuIncremental(taskset, tightened=tightened, tables=tables)
+    inc = RtgpuIncremental(taskset, tightened=tightened, tables=tables,
+                           preemption=preemption)
     tried = 0
     found: list[TaskAnalysis] = []
 
@@ -172,6 +175,7 @@ def grid_search(
     hint: Optional[Sequence[Optional[int]]] = None,
     tables: Optional[AnalysisTables] = None,
     engine: str = "frontier",
+    preemption: "PreemptionModel | str | None" = None,
 ) -> FederatedResult:
     """Algorithm 2 brute force for an arbitrary analyzer (used by baselines).
 
@@ -180,9 +184,19 @@ def grid_search(
     ``max_candidates`` budget does not truncate the search (a truncated
     frontier and a truncated DFS may give up on different subtrees), and
     1-2 orders of magnitude more candidates/sec; ``engine="dfs"`` selects
-    the scalar prefix-DFS reference path."""
+    the scalar prefix-DFS reference path.  ``preemption`` selects the GPU
+    arbitration model (the search still enumerates capacity-disjoint
+    vectors: under priority arbitration the sum constraint is conservative,
+    never unsound)."""
     if engine not in ("frontier", "dfs"):
         raise ValueError(f"unknown search engine {engine!r}")
+    pm = PreemptionModel.coerce(preemption)
+    if pm.enabled and analyzer not in (analyze_rtgpu, analyze_rtgpu_plus):
+        # a custom analyzer can't receive the model — failing loud beats
+        # silently certifying priority arbitration with dedicated bounds
+        raise ValueError(
+            "preemption-aware search requires the RTGPU analyzers"
+        )
     if analyzer in (analyze_rtgpu, analyze_rtgpu_plus):
         tight = analyzer is analyze_rtgpu_plus
         if engine == "frontier":
@@ -191,10 +205,11 @@ def grid_search(
             return grid_search_frontier(
                 taskset, gn_total, tightened=tight,
                 max_nodes=max_candidates, hint=hint, tables=tables,
+                preemption=preemption,
             )
         return grid_search_dfs(
             taskset, gn_total, tightened=tight, max_nodes=max_candidates,
-            hint=hint, tables=tables,
+            hint=hint, tables=tables, preemption=preemption,
         )
     mins = min_viable_alloc(taskset, gn_total)
     if mins is None:
@@ -249,20 +264,36 @@ def schedule(
     hint: Optional[Sequence[Optional[int]]] = None,
     tables: Optional[AnalysisTables] = None,
     engine: str = "frontier",
+    preemption: "PreemptionModel | str | None" = None,
 ) -> FederatedResult:
     """Entry point used by the runtime admission controller.
 
     ``engine`` selects the RTGPU grid-search implementation: the batched
     ``"frontier"`` (default) or the scalar ``"dfs"`` oracle."""
+    pm = PreemptionModel.coerce(preemption)
+    greedy_analyzer = analyzer
+    if pm.enabled:
+        if analyzer not in (analyze_rtgpu, analyze_rtgpu_plus):
+            raise ValueError(
+                "preemption-aware scheduling requires the RTGPU analyzers"
+            )
+
+        def greedy_analyzer(ts_, alloc_, _base=analyzer):
+            # bind the arbitration model so the greedy path certifies the
+            # same analysis the grid paths do
+            return _base(ts_, alloc_, preemption=pm)
+
     if mode == "grid":
         return grid_search(taskset, gn_total, analyzer, max_candidates,
-                           hint=hint, tables=tables, engine=engine)
+                           hint=hint, tables=tables, engine=engine,
+                           preemption=preemption)
     if mode == "greedy":
-        return greedy_search(taskset, gn_total, analyzer)
+        return greedy_search(taskset, gn_total, greedy_analyzer)
     if mode == "greedy+grid":
-        res = greedy_search(taskset, gn_total, analyzer)
+        res = greedy_search(taskset, gn_total, greedy_analyzer)
         if res.schedulable:
             return res
         return grid_search(taskset, gn_total, analyzer, max_candidates,
-                           hint=hint, tables=tables, engine=engine)
+                           hint=hint, tables=tables, engine=engine,
+                           preemption=preemption)
     raise ValueError(f"unknown mode {mode!r}")

@@ -238,20 +238,32 @@ class ScenarioPreset:
     n_hosts: int = 1
     placement: str = "least_loaded"
     imbalance_threshold: float = 0.25
+    # GPU arbitration (all kinds): "none" = federated dedicated slices,
+    # "priority" = preemptive priority-driven GPU context (GCAPS-style)
+    preemption: str = "none"
+    gpu_ctx_overhead: float = 0.0
 
     def __post_init__(self) -> None:
         if self.kind not in ("static", "churn", "fleet"):
             raise ValueError(f"unknown scenario kind {self.kind!r}")
+        if self.preemption not in ("none", "priority"):
+            raise ValueError(f"unknown preemption mode {self.preemption!r}")
 
     def build_static(self) -> tuple["TaskSet", list[int]]:
-        """Task set + GN allocation (Algorithm 2; even split on failure)."""
+        """Task set + GN allocation (Algorithm 2; even split on failure).
+
+        Certified under the preset's own arbitration model, so a static
+        ``preemption="priority"`` preset never records an allocation whose
+        bounds the priority-arbitrated engine can exceed."""
         from .federated import schedule
-        from .rta import analyze_rtgpu_plus
+        from .rta import PreemptionModel, analyze_rtgpu_plus
 
         rng = np.random.default_rng(self.seed)
         ts = generate_taskset(rng, self.total_util, self.config)
         res = schedule(ts, self.gn_total, analyzer=analyze_rtgpu_plus,
-                       mode="greedy+grid", max_candidates=2000)
+                       mode="greedy+grid", max_candidates=2000,
+                       preemption=PreemptionModel.coerce(
+                           self.preemption, ctx=self.gpu_ctx_overhead))
         if res.schedulable:
             return ts, list(res.alloc)
         return ts, [max(1, self.gn_total // len(ts))] * len(ts)
@@ -263,9 +275,9 @@ class ScenarioPreset:
 
 
 #: The regression-corpus presets: steady, worst-case, near-critical
-#: utilization, bus saturation, and three churn regimes.  Names are the
-#: golden-file stems; changing a preset's parameters requires deliberately
-#: re-recording its golden file.
+#: utilization, bus saturation, three churn regimes, preemptive-GPU churn,
+#: and the multi-host fleet.  Names are the golden-file stems; changing a
+#: preset's parameters requires deliberately re-recording its golden file.
 GOLDEN_SCENARIOS: tuple[ScenarioPreset, ...] = (
     ScenarioPreset(
         name="steady", kind="static", seed=0, horizon=4000.0, gn_total=10,
@@ -315,6 +327,18 @@ GOLDEN_SCENARIOS: tuple[ScenarioPreset, ...] = (
         gn_total=8, release_jitter=False, worst_case=True,
         churn=ChurnConfig(), churn_horizon=4000.0,
         description="WCET churn: deterministic durations, periodic releases",
+    ),
+    ScenarioPreset(
+        name="preemptive_churn", kind="churn", seed=1, horizon=5000.0,
+        gn_total=4, preemption="priority", gpu_ctx_overhead=0.02,
+        churn=ChurnConfig(mean_interarrival=150.0,
+                          lifetime_range=(2500.0, 5000.0),
+                          util_range=(0.03, 0.08),
+                          task_config=GeneratorConfig(n_subtasks=3)),
+        churn_horizon=4000.0,
+        description="priority-preemptive GPU slices under capacity-bound "
+                    "churn: overlapping slice holdings, kernel "
+                    "preempt/resume hand-offs, context-switch overhead",
     ),
     ScenarioPreset(
         name="fleet_churn", kind="fleet", seed=0, horizon=7000.0,

@@ -27,11 +27,13 @@ import math
 from typing import Callable, Sequence
 
 from .task import RTTask, TaskSet
-from .workload import ViewTables, cpu_view, mem_view
+from .workload import ViewTables, cpu_view, gpu_view, mem_view
 
 __all__ = [
     "fixed_point",
     "bus_blocking",
+    "gpu_blocking",
+    "PreemptionModel",
     "TaskAnalysis",
     "SetAnalysis",
     "AnalysisTables",
@@ -42,6 +44,49 @@ __all__ = [
 
 _INF = math.inf
 _EPS = 1e-9
+
+
+@dataclasses.dataclass(frozen=True)
+class PreemptionModel:
+    """GPU arbitration model threaded through every analysis layer.
+
+    ``mode="none"`` (default) is the paper's federated assumption: every
+    task owns dedicated virtual SMs, GPU segments are contention-free by
+    construction, and the analysis reduces to Lemma 5.1 verbatim.
+
+    ``mode="priority"`` is the GCAPS-style shared accelerator
+    (arXiv:2406.05221): one *preemptive priority-driven* GPU execution
+    context per host.  A kernel still runs at the speed of its own
+    ``2·GN`` interleave lanes (Lemma 5.1), but only the highest-priority
+    ready kernel occupies the GPU at any instant — slices are shared in
+    time, so allocations need not be capacity-disjoint.  ``ctx`` is the
+    context-switch (preempt/resume) overhead charged per preemption.
+    """
+
+    mode: str = "none"          # "none" | "priority"
+    ctx: float = 0.0            # context-switch overhead per preemption
+
+    def __post_init__(self) -> None:
+        if self.mode not in ("none", "priority"):
+            raise ValueError(f"unknown preemption mode {self.mode!r}")
+        if self.ctx < 0.0:
+            raise ValueError("negative context-switch overhead")
+
+    @property
+    def enabled(self) -> bool:
+        return self.mode == "priority"
+
+    @staticmethod
+    def coerce(
+        spec: "PreemptionModel | str | None", ctx: float = 0.0
+    ) -> "PreemptionModel":
+        """Normalize a user-facing spec (``"none"``/``"priority"`` strings,
+        an existing model, or None) into a :class:`PreemptionModel`."""
+        if spec is None:
+            return PreemptionModel()
+        if isinstance(spec, PreemptionModel):
+            return spec
+        return PreemptionModel(mode=spec, ctx=ctx)
 
 
 def bus_blocking(tasks: Sequence[RTTask]) -> list[float]:
@@ -57,6 +102,25 @@ def bus_blocking(tasks: Sequence[RTTask]) -> list[float]:
         out[k] = acc
         if tasks[k].n_mem:
             acc = max(acc, max(tasks[k].mem_hi))
+    return out
+
+
+def gpu_blocking(tasks: Sequence[RTTask], ctx: float) -> list[float]:
+    """Preemptive-GPU blocking per priority level (GCAPS-style B^g term).
+
+    ``out[k]`` bounds the non-preemptible lower-priority GPU occupancy that
+    can delay task k's kernels: under priority-driven arbitration a
+    lower-priority kernel in flight is preempted immediately, but evicting
+    it costs one context switch — so the blocking is ``ctx`` whenever any
+    lower-priority task launches kernels at all, else 0 (allocation-free,
+    like :func:`bus_blocking`)."""
+    n = len(tasks)
+    out = [0.0] * n
+    any_gpu = False
+    for k in range(n - 1, -1, -1):
+        out[k] = ctx if any_gpu else 0.0
+        if tasks[k].n_gpu:
+            any_gpu = True
     return out
 
 
@@ -144,23 +208,29 @@ class AnalysisTables:
     def __init__(self) -> None:
         self.mem: dict[tuple, "ViewTables"] = {}
         self.cpu: dict[tuple, "ViewTables"] = {}
+        # preemptive-GPU occupancy views, keyed (task, GN, ctx): the
+        # context-switch overhead is baked into the staircase, so analyses
+        # under different preemption configs never share a GPU view
+        self.gpu: dict[tuple, "ViewTables"] = {}
 
     def fork(self) -> "AnalysisTables":
         child = AnalysisTables()
         child.mem = dict(self.mem)
         child.cpu = dict(self.cpu)
+        child.gpu = dict(self.gpu)
         return child
 
     def adopt(self, other: "AnalysisTables") -> None:
         self.mem = other.mem
         self.cpu = other.cpu
+        self.gpu = other.gpu
 
     def __len__(self) -> int:
-        return len(self.mem) + len(self.cpu)
+        return len(self.mem) + len(self.cpu) + len(self.gpu)
 
     def fingerprint(self) -> tuple:
         """Hashable summary of the cache contents (for state-identity tests)."""
-        return (frozenset(self.mem), frozenset(self.cpu))
+        return (frozenset(self.mem), frozenset(self.cpu), frozenset(self.gpu))
 
 
 class RtgpuIncremental:
@@ -190,11 +260,19 @@ class RtgpuIncremental:
         taskset: TaskSet,
         tightened: bool = False,
         tables: "AnalysisTables | None" = None,
+        preemption: "PreemptionModel | str | None" = None,
     ):
         self.taskset = taskset
         self.tightened = tightened
+        self.preemption = PreemptionModel.coerce(preemption)
         # Bus blocking for task k: longest lower-priority copy (alloc-free).
         self._blocking = bus_blocking(taskset.tasks)
+        # GPU blocking (preemptive arbitration only): one context switch
+        # whenever any lower-priority task launches kernels (alloc-free).
+        self._gpu_blocking = (
+            gpu_blocking(taskset.tasks, self.preemption.ctx)
+            if self.preemption.enabled else None
+        )
         # Views are keyed by the (frozen, hashable) task itself so an external
         # AnalysisTables can be shared across task sets and priority orders.
         self._tables = tables if tables is not None else AnalysisTables()
@@ -211,6 +289,15 @@ class RtgpuIncremental:
             self._tables.cpu[key] = ViewTables(cpu_view(self.taskset[i], 2 * gn))
         return self._tables.cpu[key]
 
+    def gpu_tables(self, i: int, gn: int) -> ViewTables:
+        ctx = self.preemption.ctx
+        key = (self.taskset[i], gn, ctx)
+        if key not in self._tables.gpu:
+            self._tables.gpu[key] = ViewTables(
+                gpu_view(self.taskset[i], 2 * gn, ctx)
+            )
+        return self._tables.gpu[key]
+
     def analyze_task(self, k: int, alloc_prefix: Sequence[int]) -> TaskAnalysis:
         """Analyze task k given allocations for tasks 0..k (inclusive)."""
         if len(alloc_prefix) < k + 1:
@@ -223,6 +310,26 @@ class RtgpuIncremental:
         bounds = [g.response_bounds(n_vsm) for g in task.gpu]
         gpu_lo = tuple(b[0] for b in bounds)
         gpu_hi = tuple(b[1] for b in bounds)
+
+        if self.preemption.enabled and task.n_gpu:
+            # Priority-driven shared GPU (GCAPS-style): each kernel's
+            # dedicated-speed bound is the base of a preemptive fixed point
+            # over higher-priority GPU occupancy (each hp kernel inflated
+            # by one context switch) plus the lower-priority blocking term.
+            hp_gpu = [
+                self.gpu_tables(i, alloc_prefix[i])
+                for i in range(k)
+                if self.taskset[i].n_gpu
+            ]
+            g_block = self._gpu_blocking[k]
+
+            def interf_g(t: float) -> float:
+                return sum(tb.max_workload(t) for tb in hp_gpu) + g_block
+
+            gpu_hi = tuple(
+                fixed_point(gpu_hi[j], interf_g, limit)
+                for j in range(task.n_gpu)
+            )
 
         hp_mem = [
             self.mem_tables(i, alloc_prefix[i])
@@ -286,26 +393,35 @@ class RtgpuIncremental:
         )
 
 
-def analyze_rtgpu(taskset: TaskSet, alloc: Sequence[int]) -> SetAnalysis:
+def analyze_rtgpu(
+    taskset: TaskSet,
+    alloc: Sequence[int],
+    preemption: "PreemptionModel | str | None" = None,
+) -> SetAnalysis:
     """Full RTGPU schedulability analysis for a given virtual-SM allocation.
 
     ``alloc[i]`` is GN_i (physical SMs / chip-slices); each task gets
     ``2*GN_i`` virtual SMs (interleave lanes).  Priority order = index order
-    of ``taskset`` (0 highest).
+    of ``taskset`` (0 highest).  ``preemption`` selects the GPU arbitration
+    model (default: the paper's dedicated federated slices).
     """
     if len(alloc) != len(taskset):
         raise ValueError("allocation length must match task count")
-    inc = RtgpuIncremental(taskset)
+    inc = RtgpuIncremental(taskset, preemption=preemption)
     return SetAnalysis(
         tuple(inc.analyze_task(k, alloc) for k in range(len(taskset)))
     )
 
 
-def analyze_rtgpu_plus(taskset: TaskSet, alloc: Sequence[int]) -> SetAnalysis:
+def analyze_rtgpu_plus(
+    taskset: TaskSet,
+    alloc: Sequence[int],
+    preemption: "PreemptionModel | str | None" = None,
+) -> SetAnalysis:
     """Beyond-paper variant: Theorem 5.6 plus the tightened joint bound R̂3."""
     if len(alloc) != len(taskset):
         raise ValueError("allocation length must match task count")
-    inc = RtgpuIncremental(taskset, tightened=True)
+    inc = RtgpuIncremental(taskset, tightened=True, preemption=preemption)
     return SetAnalysis(
         tuple(inc.analyze_task(k, alloc) for k in range(len(taskset)))
     )

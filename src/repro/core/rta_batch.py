@@ -40,7 +40,13 @@ from typing import Optional, Sequence
 import numpy as np
 
 from .backend import get_backend
-from .rta import RtgpuIncremental, SetAnalysis, TaskAnalysis, AnalysisTables
+from .rta import (
+    AnalysisTables,
+    PreemptionModel,
+    RtgpuIncremental,
+    SetAnalysis,
+    TaskAnalysis,
+)
 from .task import TaskSet
 from .workload import ViewTables, workload_fn
 
@@ -621,6 +627,9 @@ class DepthAnalysis:
     r1: np.ndarray         # (Bc,)
     r2: np.ndarray         # (Bc,)
     gpu_bounds: dict[int, tuple[tuple[float, ...], tuple[float, ...]]]
+    #: per-child preemptive kernel responses (priority arbitration only) —
+    #: replaces the dedicated Lemma-5.1 upper bounds in gpu_bounds
+    gpu_resp: Optional[np.ndarray] = None   # (Bc, n_gpu)
 
     @property
     def response(self) -> np.ndarray:
@@ -635,6 +644,8 @@ class DepthAnalysis:
         p = int(self.parent[i])
         g = int(self.g[i])
         lo, hi = self.gpu_bounds[g]
+        if self.gpu_resp is not None:
+            hi = tuple(float(v) for v in self.gpu_resp[i])
         return TaskAnalysis(
             name=self.name,
             n_vsm=2 * g,
@@ -663,11 +674,14 @@ class BatchAnalyzer:
         tightened: bool = False,
         tables: Optional[AnalysisTables] = None,
         backend: Optional[str] = None,
+        preemption: "PreemptionModel | str | None" = None,
     ):
         self.taskset = taskset
         self.tightened = tightened
+        self.preemption = PreemptionModel.coerce(preemption)
         self._inc = RtgpuIncremental(taskset, tightened=tightened,
-                                     tables=tables)
+                                     tables=tables,
+                                     preemption=self.preemption)
         self._engine = _engine(backend)
         self._gpu_cache: dict[tuple[int, int], tuple] = {}
         # Largest window any fixed point in this task set can query: its
@@ -696,12 +710,18 @@ class BatchAnalyzer:
         self, k: int, kind: str, parent_prefixes: np.ndarray
     ) -> list[_HpGroup]:
         ts = self.taskset
+        fetch = {
+            "mem": self._inc.mem_tables,
+            "cpu": self._inc.cpu_tables,
+            "gpu": self._inc.gpu_tables,
+        }[kind]
         groups: list[_HpGroup] = []
         for i in range(k):
             if kind == "mem" and not ts[i].n_mem:
                 continue
+            if kind == "gpu" and not ts[i].n_gpu:
+                continue
             col = parent_prefixes[:, i]
-            fetch = self._inc.mem_tables if kind == "mem" else self._inc.cpu_tables
             vt_by_gn = {int(g): fetch(i, int(g)) for g in np.unique(col)}
             groups.append(_HpGroup(vt_by_gn=vt_by_gn, gn_col=col))
         return groups
@@ -739,7 +759,28 @@ class BatchAnalyzer:
 
         # Theorem 5.6 combination: per *child* (own GN enters via Lemma 5.1)
         uniq_g, inv = np.unique(g, return_inverse=True)
-        gpu_sum = np.array([self._gpu(k, int(gv))[2] for gv in uniq_g])[inv]
+        gpu_resp = None
+        if self.preemption.enabled and task.n_gpu:
+            # Preemptive GPU (GCAPS-style): per-child fixed points over
+            # higher-priority GPU occupancy — base = each kernel's
+            # dedicated-speed bound at the child's own GN, interference at
+            # the parent's prefix, const = the lower-priority blocking term.
+            # Lockstep twin of the scalar interf_g closure (bit-identical).
+            gpu_groups = self._groups(k, "gpu", parent_prefixes)
+            child_gpu = [
+                _HpGroup(grp.vt_by_gn, grp.gn_col[parent])
+                for grp in gpu_groups
+            ]
+            gbase = np.array(
+                [self._gpu(k, int(gv))[1] for gv in uniq_g], dtype=np.float64
+            )[inv]
+            gpu_resp = self._engine.fixed_point_batch(
+                gbase, limit, [child_gpu], self._inc._gpu_blocking[k],
+                self._horizon,
+            )
+            gpu_sum = _seq_sum(gpu_resp)
+        else:
+            gpu_sum = np.array([self._gpu(k, int(gv))[2] for gv in uniq_g])[inv]
 
         r1 = (gpu_sum + mem_sum[parent]) + cpu_sum[parent]
         r1[(mem_bad | cpu_bad)[parent]] = _INF
@@ -780,6 +821,7 @@ class BatchAnalyzer:
             gpu_bounds={
                 int(gv): self._gpu(k, int(gv))[:2] for gv in uniq_g
             },
+            gpu_resp=gpu_resp,
         )
 
     def analyze_prefixes(
@@ -815,6 +857,7 @@ def grid_search_frontier(
     hint: Optional[Sequence[Optional[int]]] = None,
     tables: Optional[AnalysisTables] = None,
     backend: Optional[str] = None,
+    preemption: "PreemptionModel | str | None" = None,
 ):
     """Algorithm 2 as a breadth-wise batched frontier search.
 
@@ -839,7 +882,7 @@ def grid_search_frontier(
     suffix = _suffix_mins(mins)
 
     ana = BatchAnalyzer(taskset, tightened=tightened, tables=tables,
-                        backend=backend)
+                        backend=backend, preemption=preemption)
     tried = 0
     prefixes = np.zeros((1, 0), dtype=np.int64)
     rems = np.array([gn_total], dtype=np.int64)

@@ -36,6 +36,7 @@ __all__ = [
     "ViewTables",
     "cpu_view",
     "mem_view",
+    "gpu_view",
     "suspension_oblivious_view",
     "workload_fn",
     "max_workload",
@@ -82,8 +83,14 @@ def _lo_response(task: RTTask, kind: SegmentKind, idx: int, n_vsm: int) -> float
     return lo
 
 
-def _build_view(task: RTTask, res: SegmentKind, n_vsm: int) -> ResourceView:
-    """Generic construction of the three paper case-analyses (DESIGN.md §5.2)."""
+def _build_view(
+    task: RTTask, res: SegmentKind, n_vsm: int, exec_pad: float = 0.0
+) -> ResourceView:
+    """Generic construction of the three paper case-analyses (DESIGN.md §5.2).
+
+    ``exec_pad`` inflates every execution-segment upper bound by a constant
+    (the preemptive-GPU view charges one context-switch overhead per kernel
+    occurrence this way — see :func:`gpu_view`)."""
     chain = task.chain()
     exec_hi: list[float] = []
     gaps: list[float] = []
@@ -96,9 +103,13 @@ def _build_view(task: RTTask, res: SegmentKind, n_vsm: int) -> ResourceView:
                 gaps.append(cur_gap)
             seen_first = True
             cur_gap = 0.0
-            exec_hi.append(
-                task.cpu_hi[idx] if res is SegmentKind.CPU else task.mem_hi[idx]
-            )
+            if res is SegmentKind.CPU:
+                ln = task.cpu_hi[idx]
+            elif res is SegmentKind.MEM:
+                ln = task.mem_hi[idx]
+            else:
+                _, ln = task.gpu[idx].response_bounds(n_vsm)
+            exec_hi.append(ln + exec_pad)
         else:
             lo = _lo_response(task, kind, idx, n_vsm)
             if seen_first:
@@ -133,6 +144,22 @@ def cpu_view(task: RTTask, n_vsm: int) -> ResourceView:
 def mem_view(task: RTTask, n_vsm: int) -> ResourceView:
     """Lemma 5.2: memory copies are execution; CPU+GPU are suspension."""
     return _build_view(task, SegmentKind.MEM, n_vsm)
+
+
+def gpu_view(task: RTTask, n_vsm: int, ctx: float = 0.0) -> ResourceView:
+    """Preemptive-GPU occupancy view (GCAPS-style, beyond-paper).
+
+    Under priority-driven GPU arbitration the accelerator is one serial,
+    *preemptive* execution context per host: GPU segments are execution
+    (their dedicated Lemma-5.1 upper response bound ``GR̂`` on the task's
+    own ``n_vsm`` interleave lanes — occupancy while the kernel actually
+    holds the GPU), CPU + memory-copy segments are suspension.  Each kernel
+    occurrence is inflated by ``ctx``, the context-switch overhead: one
+    higher-priority kernel arrival causes at most one preemption somewhere
+    below it, so charging the switch cost to the *preemptor's* staircase
+    contribution jointly covers every resume penalty the runtime bills to
+    preempted kernels (see ``repro.runtime.engine``)."""
+    return _build_view(task, SegmentKind.GPU, n_vsm, exec_pad=ctx)
 
 
 def suspension_oblivious_view(task: RTTask, n_vsm: int) -> ResourceView:

@@ -1,10 +1,14 @@
 """Admission control: Algorithm 2 as a serving-cluster front door.
 
 The controller owns ``gn_total`` accelerator slices per host (e.g. the
-16-chip "model"-axis groups of the production mesh).  Every admitted task
-gets a *dedicated* slice allocation (federated — no preemption needed)
-and the bus/CPU schedulability is re-verified on each admission with the
-full RTGPU analysis.  Rejected tasks leave the system state untouched.
+16-chip "model"-axis groups of the production mesh).  Under the default
+``preemption="none"`` every admitted task gets a *dedicated*
+(capacity-disjoint) slice allocation — federated, contention-free by
+construction; with ``preemption="priority"`` admissions are certified
+against GCAPS-style priority-preemptive GPU slices instead, so holdings
+may overlap (each task's GN is bounded by the pool alone).  Either way
+the full RTGPU analysis is re-verified on each admission and rejected
+tasks leave the system state untouched.
 
 Since the online-scheduling subsystem landed this is a thin wrapper over
 :class:`repro.sched.DynamicController` in *instant*-transition mode: the
@@ -49,6 +53,8 @@ class AdmissionController:
         engine: str = "batch",
         hosts: int = 1,
         placement: str = "least_loaded",
+        preemption: str = "none",
+        gpu_ctx_overhead: float = 0.0,
     ):
         # ``mode`` is accepted for signature compatibility with the one-shot
         # controller but IGNORED: the dynamic controller always runs its
@@ -58,7 +64,10 @@ class AdmissionController:
         # (default) or the scalar reference path ("scalar") underneath.
         # ``hosts > 1`` federates admission across that many identical
         # instant-mode controllers (``gn_total`` slices EACH) behind a
-        # CapacityBroker with the given placement policy.
+        # CapacityBroker with the given placement policy.  ``preemption``
+        # selects the GPU arbitration model the admissions are certified
+        # against ("none" = federated dedication, "priority" = GCAPS-style
+        # preemptive slices with ``gpu_ctx_overhead`` per switch).
         self.gn_total = gn_total
         self.mode = mode
         self.hosts = hosts
@@ -74,6 +83,8 @@ class AdmissionController:
                 allow_realloc=True,
                 max_candidates=max_candidates,
                 placement=placement,
+                preemption=preemption,
+                gpu_ctx_overhead=gpu_ctx_overhead,
             )
         else:
             self._dyn = DynamicController(
@@ -84,6 +95,8 @@ class AdmissionController:
                 max_candidates=max_candidates,
                 trace=trace,
                 engine=engine,
+                preemption=preemption,
+                gpu_ctx_overhead=gpu_ctx_overhead,
             )
             self._broker = None
 

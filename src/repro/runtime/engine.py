@@ -8,8 +8,15 @@ simulator variant:
   * bus: non-preemptive fixed-priority (one PCIe-like channel) — the
     holder keeps the bus until its copy completes, then the
     highest-priority waiter takes over;
-  * accelerator: federated — every member owns dedicated virtual SMs, so
-    GPU segments always run (no contention by construction);
+  * accelerator: pluggable arbitration
+    (:meth:`SchedulingPolicy.gpu_arbitration`) — ``"none"`` is the
+    federated default (every member owns dedicated virtual SMs, so GPU
+    segments always run: no contention by construction); ``"priority"``
+    is one *preemptive priority-driven* GPU execution context per
+    resource group (GCAPS-style): only the highest-priority ready kernel
+    runs, a preempted kernel is charged the configurable context-switch
+    overhead when evicted, and ``preempt``/``resume`` trace events mark
+    every hand-off;
 
 plus segment-completion bookkeeping (advance the chain, release the bus
 after a copy, detect job completion) and :class:`~repro.sched.EventTrace`
@@ -135,6 +142,19 @@ class SchedulingPolicy(abc.ABC):
         Default: none."""
         return {}
 
+    def gpu_arbitration(self) -> tuple[str, float]:
+        """GPU arbitration model as ``(mode, ctx_overhead)``.
+
+        ``("none", 0.0)`` — dedicated federated slices: every member's GPU
+        segment always runs (the seed behavior, byte-identical).
+        ``("priority", ctx)`` — one preemptive priority-driven GPU
+        execution context per resource group: the highest-priority member
+        with a ready kernel owns the GPU; on eviction the preempted job is
+        charged ``ctx`` (state save/restore) and traced ``preempt``, and
+        traced ``resume`` when it re-acquires the GPU.  Read once per
+        :meth:`DiscreteEventEngine.run`."""
+        return ("none", 0.0)
+
 
 class DiscreteEventEngine:
     """The shared event loop.  Construct with a policy, call :meth:`run`.
@@ -154,6 +174,10 @@ class DiscreteEventEngine:
         # per resource group: non-preemptive bus holder / last core owner
         self.bus_owner: dict[Hashable, Hashable] = {}
         self._last_cpu_owner: dict[Hashable, Hashable] = {}
+        # priority-preemptive GPU lanes only: per-group kernel owner and
+        # the members whose in-flight kernel is currently evicted
+        self.gpu_owner: dict[Hashable, Hashable] = {}
+        self._gpu_preempted: set = set()
         policy.bind(self)
 
     def record(self, kind: str, key, **meta) -> None:
@@ -173,10 +197,14 @@ class DiscreteEventEngine:
         job.key = key
         job.remaining = job.durations[0]
         self.jobs[key] = job
+        self._gpu_preempted.discard(key)
         self.record("release", key, deadline=job.deadline_abs)
 
     def run(self, horizon: float) -> None:
         policy = self.policy
+        gpu_mode, gpu_ctx = policy.gpu_arbitration()
+        if gpu_mode not in ("none", "priority"):
+            raise ValueError(f"unknown GPU arbitration mode {gpu_mode!r}")
         while self.now < horizon - policy.horizon_slack:
             # 1. external events, then releases due now
             policy.begin_step(self.now)
@@ -233,8 +261,9 @@ class DiscreteEventEngine:
                 self.bus_owner[g] = owner
 
             # running: CPU owners, bus holders (groups in appearance
-            # order), every GPU segment (dedicated lanes) — kept in
-            # arbitration order for deterministic completion processing
+            # order), then the accelerator under the policy's arbitration
+            # model — kept in arbitration order for deterministic
+            # completion processing
             running = []
             for g in groups:
                 if cpu_owners[g] is not None:
@@ -242,9 +271,42 @@ class DiscreteEventEngine:
             for g in groups:
                 if self.bus_owner[g] is not None:
                     running.append(self.bus_owner[g])
-            for k in order:
-                if self.seg_kind(k) is SegmentKind.GPU:
-                    running.append(k)
+            if gpu_mode == "none":
+                # federated dedicated lanes: every GPU segment runs
+                for k in order:
+                    if self.seg_kind(k) is SegmentKind.GPU:
+                        running.append(k)
+            else:
+                # one preemptive priority-driven GPU context per group
+                for g in groups:
+                    owner = next(
+                        (k for k in members[g]
+                         if self.seg_kind(k) is SegmentKind.GPU),
+                        None,
+                    )
+                    last = self.gpu_owner.get(g)
+                    if (
+                        last is not None
+                        and owner != last
+                        and self.seg_kind(last) is SegmentKind.GPU
+                        and self.jobs[last].remaining > _EPS
+                    ):
+                        # evicted mid-kernel: the victim is charged the
+                        # context switch (state save/restore) and serves
+                        # it when it re-acquires the GPU
+                        self.jobs[last].remaining += gpu_ctx
+                        self._gpu_preempted.add(last)
+                        self.record(
+                            "preempt", last, resource="gpu",
+                            by=policy.display_name(owner)
+                            if owner is not None else "",
+                        )
+                    if owner is not None and owner in self._gpu_preempted:
+                        self._gpu_preempted.discard(owner)
+                        self.record("resume", owner, resource="gpu")
+                    self.gpu_owner[g] = owner
+                    if owner is not None:
+                        running.append(owner)
 
             # 3. next event: earliest completion or policy-side event
             dt = math.inf
@@ -272,6 +334,14 @@ class DiscreteEventEngine:
                     and self.bus_owner.get(g) == k
                 ):
                     self.bus_owner[g] = None
+                if (
+                    job.chain[job.seg_idx][0] is SegmentKind.GPU
+                    and self.gpu_owner.get(g) == k
+                ):
+                    # release the GPU context with the kernel: a stale
+                    # owner would read a successor job's fresh kernel as
+                    # an in-flight one and bill it a phantom preemption
+                    self.gpu_owner[g] = None
                 job.seg_idx += 1
                 if job.seg_idx < len(job.chain):
                     job.remaining = job.durations[job.seg_idx]

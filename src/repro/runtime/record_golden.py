@@ -59,6 +59,12 @@ def preset_params(preset: ScenarioPreset) -> dict:
         irrelevant = ("total_util", "config")
     for field in ("name", "kind", "description") + irrelevant:
         params.pop(field, None)
+    if preset.preemption == "none":
+        # the inert default: dedicated-slice presets recorded before the
+        # arbitration seam existed stay valid without re-recording (the
+        # ctx overhead is read only under "priority")
+        params.pop("preemption", None)
+        params.pop("gpu_ctx_overhead", None)
     return json.loads(json.dumps(params))
 
 
@@ -78,6 +84,8 @@ def record_scenario(preset: ScenarioPreset) -> dict:
             ts, alloc, preset.horizon, seed=preset.seed,
             release_jitter=preset.release_jitter,
             worst_case=preset.worst_case, trace=trace,
+            preemption=preset.preemption,
+            gpu_ctx_overhead=preset.gpu_ctx_overhead,
         )
         doc["alloc"] = alloc
         doc["result"] = {
@@ -91,6 +99,8 @@ def record_scenario(preset: ScenarioPreset) -> dict:
             events, preset.gn_total, preset.horizon, seed=preset.seed,
             release_jitter=preset.release_jitter,
             worst_case=preset.worst_case, trace=trace,
+            preemption=preset.preemption,
+            gpu_ctx_overhead=preset.gpu_ctx_overhead,
         )
         doc["result"] = {
             "responses": res.responses,
@@ -107,6 +117,8 @@ def record_scenario(preset: ScenarioPreset) -> dict:
             seed=preset.seed, release_jitter=preset.release_jitter,
             worst_case=preset.worst_case, placement=preset.placement,
             imbalance_threshold=preset.imbalance_threshold, trace=trace,
+            preemption=preset.preemption,
+            gpu_ctx_overhead=preset.gpu_ctx_overhead,
         )
         doc["result"] = {
             "responses": res.responses,

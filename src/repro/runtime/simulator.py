@@ -110,12 +110,15 @@ class _FixedTaskSetPolicy(SchedulingPolicy):
         rng: np.random.Generator,
         release_jitter: bool,
         worst_case: bool,
+        preemption: str = "none",
+        gpu_ctx_overhead: float = 0.0,
     ):
         self.taskset = taskset
         self.alloc = alloc
         self.rng = rng
         self.release_jitter = release_jitter
         self.worst_case = worst_case
+        self._gpu_arbitration = (preemption, gpu_ctx_overhead)
         self.chains = [t.chain() for t in taskset]
         self.names = [t.name or f"task{i}" for i, t in enumerate(taskset)]
         self.releases = [
@@ -174,6 +177,9 @@ class _FixedTaskSetPolicy(SchedulingPolicy):
     def display_name(self, key) -> str:
         return self.names[key]
 
+    def gpu_arbitration(self) -> tuple[str, float]:
+        return self._gpu_arbitration
+
 
 def simulate(
     taskset: TaskSet,
@@ -183,11 +189,19 @@ def simulate(
     release_jitter: bool = True,
     worst_case: bool = False,
     trace: Optional[EventTrace] = None,
+    preemption: str = "none",
+    gpu_ctx_overhead: float = 0.0,
 ) -> SimResult:
-    """Run the federated RT executor for ``horizon`` time units."""
+    """Run the RT executor for ``horizon`` time units.
+
+    ``preemption`` selects the accelerator arbitration: ``"none"`` (the
+    federated default — dedicated lanes, byte-identical to the seed
+    behavior) or ``"priority"`` (preemptive priority-driven GPU context,
+    ``gpu_ctx_overhead`` charged per preemption)."""
     policy = _FixedTaskSetPolicy(
         taskset, alloc, np.random.default_rng(seed), release_jitter,
-        worst_case,
+        worst_case, preemption=preemption,
+        gpu_ctx_overhead=gpu_ctx_overhead,
     )
     DiscreteEventEngine(policy, trace=trace).run(horizon)
     return SimResult(
@@ -267,6 +281,11 @@ class _ChurnPolicy(SchedulingPolicy):
         self.jobs_done: dict[str, int] = {}
         self.admitted: list[str] = []
         self.rejected: list[str] = []
+
+    def gpu_arbitration(self) -> tuple[str, float]:
+        # the runtime must execute the arbitration the controller certified
+        pm = self.controller.preemption
+        return (pm.mode, pm.ctx)
 
     def _finish_boundary(self, name: str, now: float) -> None:
         """Job boundary for ``name``: reclaim if departing, else commit
@@ -377,8 +396,14 @@ def simulate_churn(
     allow_realloc: bool = True,
     controller: Optional[DynamicController] = None,
     trace: Optional[EventTrace] = None,
+    preemption: str = "none",
+    gpu_ctx_overhead: float = 0.0,
 ) -> ChurnSimResult:
-    """Execute an admit/release churn trace under the online scheduler."""
+    """Execute an admit/release churn trace under the online scheduler.
+
+    ``preemption``/``gpu_ctx_overhead`` select the GPU arbitration model
+    for the default controller; the engine always executes whatever
+    arbitration the (possibly caller-provided) controller certified."""
     if controller is None:
         controller = DynamicController(
             gn_total,
@@ -386,6 +411,8 @@ def simulate_churn(
             transition="boundary",
             allow_realloc=allow_realloc,
             trace=trace,
+            preemption=preemption,
+            gpu_ctx_overhead=gpu_ctx_overhead,
         )
     if controller.transition != "boundary":
         # an instant controller reclaims mid-job, leaving the engine's
@@ -474,6 +501,11 @@ class _FleetChurnPolicy(SchedulingPolicy):
 
     def event_meta(self, key) -> dict:
         return {"host": key[0]}
+
+    def gpu_arbitration(self) -> tuple[str, float]:
+        # simulate_fleet validates that every host certifies one model
+        pm = self.broker.hosts[0].preemption
+        return (pm.mode, pm.ctx)
 
     # ---- bookkeeping --------------------------------------------------------
 
@@ -640,6 +672,9 @@ def simulate_fleet(
     engine: str = "batch",
     broker: Optional[CapacityBroker] = None,
     trace: Optional[EventTrace] = None,
+    preemption: str = "none",
+    gpu_ctx_overhead: float = 0.0,
+    host_speeds: Optional[Sequence[float]] = None,
 ) -> FleetSimResult:
     """Execute a churn trace across ``n_hosts`` broker-routed hosts."""
     if broker is None:
@@ -652,6 +687,9 @@ def simulate_fleet(
             placement=placement,
             imbalance_threshold=imbalance_threshold,
             max_migrations_per_event=max_migrations_per_event,
+            preemption=preemption,
+            gpu_ctx_overhead=gpu_ctx_overhead,
+            host_speeds=host_speeds,
         )
     for h, ctl in enumerate(broker.hosts):
         if ctl.transition != "boundary":
@@ -660,6 +698,14 @@ def simulate_fleet(
             raise ValueError(
                 "simulate_fleet requires boundary-transition hosts "
                 f"(host {h} has transition={ctl.transition!r})"
+            )
+        if ctl.preemption != broker.hosts[0].preemption:
+            # one engine-wide arbitration model: mixed fleets would need
+            # per-lane arbitration configs the lockstep loop doesn't carry
+            raise ValueError(
+                "simulate_fleet requires one GPU arbitration model across "
+                f"hosts (host {h} has {ctl.preemption}, host 0 has "
+                f"{broker.hosts[0].preemption})"
             )
     policy = _FleetChurnPolicy(
         events, broker, np.random.default_rng(seed), release_jitter,

@@ -2,8 +2,9 @@
 
 capacity.py     Entry + SlicePool — the transactional slice-capacity
                 ledger (reserve / commit / reclaim, fork-and-adopt)
-certify.py      CertificationEngine — scalar / batched RTGPU certification
-                of transitional ledger states behind one interface
+certify.py      CertificationEngine — scalar / batched / preemptive
+                (GCAPS-style) RTGPU certification of transitional ledger
+                states behind one interface
 controller.py   DynamicController — the job-boundary mode-change protocol
                 driving the ledger and a certification engine
 federation.py   CapacityBroker — multi-host federated admission over N
@@ -23,12 +24,18 @@ from .capacity import Entry, SlicePool
 from .certify import (
     BatchCertifier,
     CertificationEngine,
+    PreemptiveCertifier,
     ScalarCertifier,
     make_certifier,
     transitional_vectors,
 )
 from .controller import DynamicController, SchedDecision
-from .federation import BrokerDecision, CapacityBroker, Migration
+from .federation import (
+    BrokerDecision,
+    CapacityBroker,
+    Migration,
+    register_placement,
+)
 from .trace import EventTrace, HostTrace, TraceEvent
 
 __all__ = [
@@ -37,6 +44,7 @@ __all__ = [
     "CertificationEngine",
     "ScalarCertifier",
     "BatchCertifier",
+    "PreemptiveCertifier",
     "make_certifier",
     "transitional_vectors",
     "DynamicController",
@@ -44,6 +52,7 @@ __all__ = [
     "CapacityBroker",
     "BrokerDecision",
     "Migration",
+    "register_placement",
     "EventTrace",
     "HostTrace",
     "TraceEvent",

@@ -40,7 +40,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from repro.core import AnalysisTables, RTTask, TaskSet
+from repro.core import AnalysisTables, PreemptionModel, RTTask, TaskSet
 from repro.core.federated import FederatedResult, grid_search_dfs
 from repro.core.rta import RtgpuIncremental, bus_blocking
 from repro.core.rta_batch import BatchAnalyzer, grid_search_frontier
@@ -51,6 +51,7 @@ __all__ = [
     "CertificationEngine",
     "ScalarCertifier",
     "BatchCertifier",
+    "PreemptiveCertifier",
     "make_certifier",
     "transitional_vectors",
 ]
@@ -82,8 +83,16 @@ class CertificationEngine(abc.ABC):
 
     name = "abstract"
 
-    def __init__(self, tightened: bool = True):
+    def __init__(
+        self,
+        tightened: bool = True,
+        preemption: "PreemptionModel | str | None" = None,
+    ):
         self.tightened = tightened
+        # GPU arbitration model certified against: "none" keeps the paper's
+        # dedicated federated slices, "priority" adds the GCAPS-style
+        # preemptive interference/blocking terms (repro.core.rta).
+        self.preemption = PreemptionModel.coerce(preemption)
 
     def certify(
         self,
@@ -106,11 +115,17 @@ class CertificationEngine(abc.ABC):
         """
         ordered = sorted(entries, key=lambda e: e.trans_task.deadline)
         ts = TaskSet(tuple(e.trans_task for e in ordered))
-        inc = RtgpuIncremental(ts, tightened=self.tightened, tables=tables)
+        inc = RtgpuIncremental(ts, tightened=self.tightened, tables=tables,
+                               preemption=self.preemption)
         vectors = transitional_vectors(ordered)
         # bus blocking below k (part of the memo key — analyze_task uses it)
         n = len(ordered)
         blocking = bus_blocking([e.trans_task for e in ordered])
+        # under preemptive arbitration the GPU blocking term (one context
+        # switch when any lower-priority task launches kernels) is part of
+        # the interference context too, so it joins the memo key — the
+        # analyzer's own list, so key and analysis can never disagree
+        g_blocking = inc._gpu_blocking if self.preemption.enabled else None
         bounds: dict[str, float] = {}
         analyses = 0
         indices = list(range(n))
@@ -131,6 +146,8 @@ class CertificationEngine(abc.ABC):
                     (e.trans_task, self_vec[k]),
                     blocking[k],
                 )
+                if g_blocking is not None:
+                    key = key + (g_blocking[k],)
                 r = memo.get(key)
                 if r is None:
                     prefix = interf_vec[:k] + [self_vec[k]]
@@ -204,6 +221,7 @@ class ScalarCertifier(CertificationEngine):
         return grid_search_dfs(
             ts, gn_total, tightened=self.tightened,
             max_nodes=max_nodes, hint=hint, tables=tables,
+            preemption=self.preemption,
         )
 
 
@@ -221,8 +239,13 @@ class BatchCertifier(CertificationEngine):
 
     name = "batch"
 
-    def __init__(self, tightened: bool = True, min_work: int = 128):
-        super().__init__(tightened=tightened)
+    def __init__(
+        self,
+        tightened: bool = True,
+        min_work: int = 128,
+        preemption: "PreemptionModel | str | None" = None,
+    ):
+        super().__init__(tightened=tightened, preemption=preemption)
         self.min_work = min_work
 
     def pinned_sweep(self, task, residents, tables, memo, g_min, free):
@@ -246,7 +269,8 @@ class BatchCertifier(CertificationEngine):
                          key=lambda e: e.trans_task.deadline)
         a = ordered.index(cand)
         ts = TaskSet(tuple(e.trans_task for e in ordered))
-        ana = BatchAnalyzer(ts, tightened=self.tightened, tables=tables)
+        ana = BatchAnalyzer(ts, tightened=self.tightened, tables=tables,
+                            preemption=self.preemption)
         vectors = transitional_vectors(ordered)
         gs = np.arange(g_min, free + 1, dtype=np.int64)
         n = len(ordered)
@@ -289,16 +313,59 @@ class BatchCertifier(CertificationEngine):
         return grid_search_frontier(
             ts, gn_total, tightened=self.tightened,
             max_nodes=max_nodes, hint=hint, tables=tables,
+            preemption=self.preemption,
+        )
+
+
+class PreemptiveCertifier(BatchCertifier):
+    """GCAPS-style certification: priority-driven preemptive GPU slices.
+
+    A :class:`BatchCertifier` whose analyses run under
+    ``PreemptionModel("priority", ctx)`` — priority-ordered GPU
+    interference plus the per-kernel preemption-overhead/blocking terms of
+    ``repro.core.rta`` — behind the unchanged :class:`CertificationEngine`
+    interface: the transitional-envelope construction
+    (:func:`transitional_vectors`), the memoized scalar loop, and the
+    batched pinned sweep all compose with it as-is.  Because the GPU is
+    shared in time, admission may certify slice sets whose total exceeds
+    the pool (see ``DynamicController``) — the capacity federated
+    dedication wastes on mutually-exclusive reservations.
+    """
+
+    name = "preemptive"
+
+    def __init__(
+        self, tightened: bool = True, min_work: int = 128, ctx: float = 0.0
+    ):
+        super().__init__(
+            tightened=tightened,
+            min_work=min_work,
+            preemption=PreemptionModel("priority", ctx),
         )
 
 
 def make_certifier(
-    engine: str, tightened: bool = True, min_work: int = 128
+    engine: str,
+    tightened: bool = True,
+    min_work: int = 128,
+    preemption: "PreemptionModel | str | None" = None,
+    gpu_ctx: float = 0.0,
 ) -> CertificationEngine:
-    """Engine factory: ``"batch"`` (default controller engine) or the
-    ``"scalar"`` reference path."""
+    """Engine factory: ``"batch"`` (default controller engine), the
+    ``"scalar"`` reference path, or ``"preemptive"`` (batched GCAPS-style
+    certification).  A ``preemption`` model composes with either base
+    engine — ``("batch", "priority")`` resolves to
+    :class:`PreemptiveCertifier`."""
+    pm = PreemptionModel.coerce(preemption, ctx=gpu_ctx)
+    if engine == "preemptive":
+        pm = pm if pm.enabled else PreemptionModel("priority", gpu_ctx)
+        return PreemptiveCertifier(tightened=tightened, min_work=min_work,
+                                   ctx=pm.ctx)
     if engine == "batch":
+        if pm.enabled:
+            return PreemptiveCertifier(tightened=tightened,
+                                       min_work=min_work, ctx=pm.ctx)
         return BatchCertifier(tightened=tightened, min_work=min_work)
     if engine == "scalar":
-        return ScalarCertifier(tightened=tightened)
+        return ScalarCertifier(tightened=tightened, preemption=pm)
     raise ValueError(f"unknown analysis engine {engine!r}")

@@ -69,6 +69,7 @@ from typing import Optional
 
 from repro.core import (
     AnalysisTables,
+    PreemptionModel,
     RTTask,
     TaskSet,
 )
@@ -115,6 +116,8 @@ class DynamicController:
         max_candidates: int = 2000,
         trace: Optional[EventTrace] = None,
         engine: str = "batch",
+        preemption: "PreemptionModel | str | None" = None,
+        gpu_ctx_overhead: float = 0.0,
     ):
         if transition not in ("boundary", "instant"):
             raise ValueError(f"unknown transition mode {transition!r}")
@@ -124,6 +127,21 @@ class DynamicController:
         self.allow_realloc = allow_realloc
         self.max_candidates = max_candidates
         self.trace = trace
+        # GPU arbitration model.  "none" (default) is federated dedication:
+        # slice holdings are capacity-disjoint and kernels never contend.
+        # "priority" certifies GCAPS-style preemptive GPU slices: kernels
+        # time-share the accelerator priority-driven (the runtime charges
+        # gpu_ctx_overhead per preemption), so admission may hand out
+        # OVERLAPPING slice sets — each task's GN is bounded by gn_total
+        # alone, not by the sum constraint — and the analysis carries the
+        # added interference/blocking terms instead.
+        self.preemption = PreemptionModel.coerce(preemption,
+                                                 ctx=gpu_ctx_overhead)
+        if engine == "preemptive" and not self.preemption.enabled:
+            # the engine name is itself an opt-in: keep the model the
+            # certifier, the capacity rule, and the runtime all read in
+            # agreement with it
+            self.preemption = PreemptionModel("priority", gpu_ctx_overhead)
         # "batch" (default) certifies the pinned admission sweep with the
         # vectorized analyzer (repro.core.rta_batch) and re-allocates via
         # the frontier grid search; "scalar" keeps the per-candidate
@@ -131,7 +149,8 @@ class DynamicController:
         # (tests/test_rta_batch.py replays churn traces on both).
         self.engine = engine
         self._certifier = make_certifier(
-            engine, tightened=tightened, min_work=self._BATCH_MIN_WORK
+            engine, tightened=tightened, min_work=self._BATCH_MIN_WORK,
+            preemption=self.preemption,
         )
         self._pool = SlicePool(gn_total)
         self._bounds: dict[str, float] = {}
@@ -245,7 +264,8 @@ class DynamicController:
         alloc = self.allocation
         alloc_list = [alloc[t.name] for t in ts]
         inc = RtgpuIncremental(
-            ts, tightened=self.tightened, tables=self._tables
+            ts, tightened=self.tightened, tables=self._tables,
+            preemption=self.preemption,
         )
         return SetAnalysis(tuple(
             inc.analyze_task(k, alloc_list) for k in range(len(ts))
@@ -290,7 +310,13 @@ class DynamicController:
         if name in self._pool:
             return self._reject(task, t, f"name {name!r} already resident")
 
-        free = self.free_capacity
+        # Capacity the arrival's GN may range over.  Federated dedication:
+        # the reclaimed-free slices only.  Priority preemption: slices are
+        # shared in time, so the arrival may hold up to the whole pool
+        # regardless of residents' (overlapping) holdings — schedulability
+        # is policed by the preemptive analysis terms, not by disjointness.
+        free = self.gn_total if self.preemption.enabled \
+            else self.free_capacity
         g_min = None
         for g in range(1, free + 1):
             if task.min_span(2 * g) <= task.deadline + _EPS:
@@ -314,11 +340,16 @@ class DynamicController:
         # Full re-allocation only helps the *instant* front door: under the
         # boundary protocol a shrinking resident keeps max(old, new) slices
         # until its job boundary, so re-allocating can never hand an arrival
-        # capacity the pinned path didn't already have.
+        # capacity the pinned path didn't already have.  Under priority
+        # preemption it is skipped entirely: the pinned sweep already ranges
+        # over the whole pool (no disjointness constraint to re-balance
+        # around), and the grid search's sum-budget enumeration models
+        # dedicated capacity, not time-shared slices.
         realloc_ok = (self.allow_realloc if allow_realloc is None
                       else self.allow_realloc and allow_realloc)
         realloc_ran = False
-        if realloc_ok and self.transition == "instant":
+        if realloc_ok and self.transition == "instant" \
+                and not self.preemption.enabled:
             dec, dfs_tried = self._admit_realloc(
                 task, pool, fork, memo, t, tried
             )

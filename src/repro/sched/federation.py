@@ -63,7 +63,7 @@ from .controller import DynamicController, SchedDecision
 from .trace import EventTrace
 
 __all__ = ["BrokerDecision", "CapacityBroker", "Migration",
-           "PLACEMENT_POLICIES"]
+           "PLACEMENT_POLICIES", "register_placement"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,11 +110,40 @@ def _least_loaded(broker: "CapacityBroker", task: RTTask) -> list[int]:
                   key=lambda h: (-broker.hosts[h].free_capacity, h))
 
 
+def _weighted(broker: "CapacityBroker", task: RTTask) -> list[int]:
+    # heterogeneous fleets: most *effective* free capacity first — free
+    # slices weighted by the host's speed class (ties → index), so a fast
+    # half-empty host beats a slow emptier one
+    return sorted(
+        range(len(broker.hosts)),
+        key=lambda h: (-broker.hosts[h].free_capacity * broker.speeds[h], h),
+    )
+
+
 PLACEMENT_POLICIES: dict[str, Callable] = {
     "first_fit": _first_fit,
     "best_fit": _best_fit,
     "least_loaded": _least_loaded,
+    "weighted": _weighted,
 }
+
+#: snapshot of the shipped policy names — register_placement() protects
+#: these without a hand-maintained duplicate list
+_BUILTIN_PLACEMENTS = frozenset(PLACEMENT_POLICIES)
+
+
+def register_placement(name: str, fn: Callable) -> None:
+    """Register a named placement policy ``(broker, task) -> host order``.
+
+    Registered names become valid ``placement=`` arguments everywhere a
+    built-in name is (brokers, ``simulate_fleet``, scenario presets).
+    Re-registering a built-in name is rejected; re-registering a custom
+    name replaces it."""
+    if not callable(fn):
+        raise TypeError(f"placement policy {name!r} must be callable")
+    if name in _BUILTIN_PLACEMENTS:
+        raise ValueError(f"cannot override built-in placement {name!r}")
+    PLACEMENT_POLICIES[name] = fn
 
 
 class CapacityBroker:
@@ -137,6 +166,7 @@ class CapacityBroker:
         max_migrations_per_event: int = 1,
         realloc_hosts: int = 1,
         trace: Optional[EventTrace] = None,
+        host_speeds: Optional[Sequence[float]] = None,
     ):
         if not hosts:
             raise ValueError("broker needs at least one host")
@@ -146,6 +176,22 @@ class CapacityBroker:
                 f"(known: {sorted(PLACEMENT_POLICIES)})"
             )
         self.hosts: tuple[DynamicController, ...] = tuple(hosts)
+        # heterogeneous fleets: relative speed class per host (1.0 =
+        # reference).  Effective capacity is gn_total * speed — the
+        # "weighted" placement and the departure-imbalance heuristic
+        # normalize by it, so identical-speed fleets behave exactly as
+        # before.
+        if host_speeds is None:
+            self.speeds: tuple[float, ...] = (1.0,) * len(self.hosts)
+        else:
+            if len(host_speeds) != len(self.hosts):
+                raise ValueError(
+                    f"host_speeds has {len(host_speeds)} entries for "
+                    f"{len(self.hosts)} hosts"
+                )
+            if any(s <= 0.0 for s in host_speeds):
+                raise ValueError("host speeds must be positive")
+            self.speeds = tuple(float(s) for s in host_speeds)
         self.placement = placement
         self.migrate_on_departure = migrate_on_departure
         self.imbalance_threshold = imbalance_threshold
@@ -170,11 +216,15 @@ class CapacityBroker:
         tightened: bool = True,
         allow_realloc: bool = True,
         max_candidates: int = 2000,
+        preemption: str = "none",
+        gpu_ctx_overhead: float = 0.0,
         **broker_kw,
     ) -> "CapacityBroker":
         """Fleet of ``n_hosts`` identical hosts; controller events are
         recorded host-tagged into ``trace`` (one Chrome lane group per
-        host)."""
+        host).  ``preemption``/``gpu_ctx_overhead`` select each host's GPU
+        arbitration model (every host runs the same one); per-host
+        ``host_speeds`` pass through to the broker."""
         hosts = [
             DynamicController(
                 gn_per_host,
@@ -184,6 +234,8 @@ class CapacityBroker:
                 max_candidates=max_candidates,
                 trace=trace.for_host(h) if trace is not None else None,
                 engine=engine,
+                preemption=preemption,
+                gpu_ctx_overhead=gpu_ctx_overhead,
             )
             for h in range(n_hosts)
         ]
@@ -216,9 +268,12 @@ class CapacityBroker:
         return dict(self._migrations)
 
     def load(self, h: int) -> float:
-        """Envelope load fraction of host ``h``."""
+        """Envelope load fraction of host ``h``, normalized by *effective*
+        capacity (``gn_total × speed``): the same slice holdings press a
+        fast host less.  Identical to the raw fraction when all speeds are
+        1.0 (the homogeneous default)."""
         ctl = self.hosts[h]
-        return ctl.capacity_in_use / ctl.gn_total
+        return ctl.capacity_in_use / (ctl.gn_total * self.speeds[h])
 
     def active_host(self, name: str) -> Optional[int]:
         """Host whose slices ``name``'s jobs currently run on."""
@@ -413,8 +468,10 @@ class CapacityBroker:
         for e in self._migration_candidates(src):
             name = e.task.name
             # a move that would just flip the imbalance is no move at all
-            gain = e.gn_hi / src_ctl.gn_total
-            if loads[src] - gain < loads[dst] + e.gn_hi / dst_ctl.gn_total \
+            # (gains/costs in effective-capacity units, like load())
+            gain = e.gn_hi / (src_ctl.gn_total * self.speeds[src])
+            cost = e.gn_hi / (dst_ctl.gn_total * self.speeds[dst])
+            if loads[src] - gain < loads[dst] + cost \
                     - self.imbalance_threshold:
                 continue
             dec = dst_ctl.admit(e.task, t=t)   # envelope-certified, or skip

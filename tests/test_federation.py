@@ -430,3 +430,111 @@ class TestServingWithBroker:
         assert broker.is_departing("svc")
         assert broker.job_boundary("svc") == "reclaimed"
         assert broker.active_host("svc") is None
+
+
+class TestHeterogeneousFleet:
+    """register_placement + the "weighted" policy + speed-normalized
+    imbalance (ISSUE 5 satellite: heterogeneous fleets)."""
+
+    def test_register_placement_custom_policy(self):
+        from repro.sched import register_placement
+        from repro.sched.federation import PLACEMENT_POLICIES
+
+        name = "reverse_index_test_only"
+        try:
+            register_placement(name, lambda b, task:
+                               list(range(len(b.hosts)))[::-1])
+            broker = CapacityBroker.build(3, 8, transition="instant",
+                                          placement=name,
+                                          migrate_on_departure=False)
+            dec = broker.admit(_task(seed=99, util=0.05, name="new"))
+            assert dec.admitted and dec.host == 2
+            assert dec.tried_hosts[0] == 2
+        finally:
+            PLACEMENT_POLICIES.pop(name, None)
+
+    def test_register_placement_validates(self):
+        from repro.sched import register_placement
+
+        with pytest.raises(ValueError, match="built-in"):
+            register_placement("least_loaded", lambda b, t: [0])
+        with pytest.raises(TypeError):
+            register_placement("not_callable_test_only", 3)
+
+    def test_host_speeds_validated(self):
+        with pytest.raises(ValueError, match="entries"):
+            CapacityBroker.build(3, 8, host_speeds=[1.0, 2.0])
+        with pytest.raises(ValueError, match="positive"):
+            CapacityBroker.build(2, 8, host_speeds=[1.0, 0.0])
+
+    def test_weighted_prefers_effective_free_capacity(self):
+        """Equal free slices everywhere: the fastest host wins; with unit
+        speeds "weighted" degenerates to exactly "least_loaded"."""
+        broker = CapacityBroker.build(
+            3, 8, transition="instant", placement="weighted",
+            migrate_on_departure=False, host_speeds=[1.0, 2.0, 1.5],
+        )
+        assert broker._placement_order(None) == [1, 2, 0]
+        uniform = CapacityBroker.build(3, 8, placement="weighted")
+        from repro.sched.federation import PLACEMENT_POLICIES
+
+        assert uniform._placement_order(None) == \
+            PLACEMENT_POLICIES["least_loaded"](uniform, None)
+
+    def test_load_normalized_by_speed(self):
+        broker = CapacityBroker.build(2, 8, transition="instant",
+                                      migrate_on_departure=False,
+                                      host_speeds=[1.0, 2.0])
+        for h in (0, 1):
+            t = _task(seed=40 + h, util=0.04, name=f"f{h}")
+            assert broker.hosts[h].admit(t).admitted
+            assert broker.hosts[h].capacity_in_use == 1
+        assert broker.load(0) == pytest.approx(1 / 8)
+        assert broker.load(1) == pytest.approx(1 / 16)
+
+    def test_migration_balances_toward_fast_host(self):
+        """A slice split that looks balanced raw is imbalanced in
+        effective-capacity terms: the broker migrates toward the fast
+        host, and the homogeneous twin of the same fleet does not."""
+        def build(speeds):
+            broker = CapacityBroker.build(
+                2, 8, transition="instant", placement="first_fit",
+                imbalance_threshold=0.45, max_migrations_per_event=2,
+                host_speeds=speeds,
+            )
+            names = []
+            for i in range(6):
+                t = _task(seed=60 + i, util=0.04, name=f"m{i}")
+                assert broker.hosts[0].admit(t).admitted
+                broker._active[t.name] = 0
+                names.append(t.name)
+            for i in range(2):
+                t = _task(seed=80 + i, util=0.04, name=f"d{i}")
+                assert broker.hosts[1].admit(t).admitted
+                broker._active[t.name] = 1
+            return broker, names
+
+        # after the release: raw loads 5/8 vs 2/8 (gap 0.375 < 0.45, no
+        # move on identical hosts) but with host 1 at speed 2 the effective
+        # gap is 0.625 - 0.125 = 0.5 > 0.45 — the broker migrates
+        hom, names = build(None)
+        hom.release(names[0])
+        assert not hom.migration_log, "raw gap is under the threshold"
+        het, names = build([1.0, 2.0])
+        het.release(names[0])
+        assert het.migration_log, "no migration despite effective imbalance"
+        mig = het.migration_log[0]
+        assert (mig.src, mig.dst) == (0, 1)
+
+    def test_simulate_fleet_host_speeds_end_to_end(self):
+        events = generate_churn_trace(
+            seed=3, horizon=2500.0,
+            config=ChurnConfig(mean_interarrival=200.0,
+                               lifetime_range=(600.0, 1800.0)),
+        )
+        res = simulate_fleet(events, n_hosts=2, gn_per_host=6,
+                             horizon=3000.0, seed=3, placement="weighted",
+                             host_speeds=[1.0, 1.5])
+        assert res.total_jobs > 0
+        assert not res.any_miss
+        assert res.bound_violations() == []
