@@ -1,0 +1,33 @@
+"""Shared BENCH_*.json envelope.
+
+Every benchmark artifact carries the same header — ``schema_version``,
+``bench`` name, a UTC timestamp, and the run ``config`` — emitted by one
+helper instead of a copy-pasted dict literal per benchmark, so downstream
+perf-trajectory tooling can key on one schema.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+#: bump when the shared envelope layout changes (not when one benchmark's
+#: body sections do — those are versioned by the ``bench`` name)
+SCHEMA_VERSION = 1
+
+
+def envelope(bench: str, config: dict, **sections) -> dict:
+    """Assemble one BENCH document: shared header + benchmark body."""
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "bench": bench,
+        "generated_at": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "config": config,
+        **sections,
+    }
+
+
+def write_bench(path: str, doc: dict) -> str:
+    with open(path, "w") as fh:
+        json.dump(doc, fh, indent=2)
+        fh.write("\n")
+    return path

@@ -37,6 +37,11 @@ from repro.core import (
 from repro.runtime import simulate_churn
 from repro.sched import DynamicController
 
+try:
+    from benchmarks._envelope import envelope, write_bench
+except ImportError:                      # run as a script from benchmarks/
+    from _envelope import envelope, write_bench
+
 GN_TOTAL = 10
 MAX_CANDIDATES = 400
 MIN_N_FOR_SPEEDUP = 6
@@ -123,23 +128,24 @@ def run(rows: list | None = None, out: str = "BENCH_churn.json",
     # end-to-end validation under the boundary-mode protocol
     sim = simulate_churn(events, GN_TOTAL, horizon + 1000.0, seed=seed)
     violations = sim.bound_violations()
-    result = {
-        "config": {
+    result = envelope(
+        "churn",
+        config={
             "gn_total": GN_TOTAL,
             "max_candidates": MAX_CANDIDATES,
             "seed": seed,
             "horizon_ms": horizon,
             "churn_events": len(events),
         },
-        "latency": latency,
-        "sim": {
+        latency=latency,
+        sim={
             "admitted": len(sim.admitted),
             "rejected": len(sim.rejected),
             "jobs": sim.total_jobs,
             "deadline_misses": sum(sim.misses.values()),
             "bound_violations": len(violations),
         },
-    }
+    )
 
     # hard checks: the acceptance criteria this benchmark exists to track
     assert not sim.any_miss, f"deadline misses under churn: {sim.misses}"
@@ -152,8 +158,7 @@ def run(rows: list | None = None, out: str = "BENCH_churn.json",
         f"{latency['speedup_accepted_n6']}x"
     )
 
-    with open(out, "w") as fh:
-        json.dump(result, fh, indent=2)
+    write_bench(out, result)
     rows.append(("churn,acceptance_ratio", latency["acceptance_ratio"]))
     rows.append(("churn,warm_total_ms", latency["warm_total_ms"]))
     rows.append(("churn,cold_total_ms", latency["cold_total_ms"]))

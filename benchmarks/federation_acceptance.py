@@ -36,6 +36,11 @@ from repro.core import ChurnConfig, GeneratorConfig, generate_churn_trace
 from repro.runtime import simulate_fleet
 from repro.sched import CapacityBroker, DynamicController
 
+try:
+    from benchmarks._envelope import envelope, write_bench
+except ImportError:                      # run as a script from benchmarks/
+    from _envelope import envelope, write_bench
+
 GN_PER_HOST = 28
 HOST_COUNTS = (1, 2, 4)
 
@@ -187,20 +192,21 @@ def run(rows: list | None = None, out: str = "BENCH_federation.json") -> dict:
     sim = bench_sim()
 
     biggest = admit[str(max(HOST_COUNTS))]
-    result = {
-        "config": {
+    result = envelope(
+        "federation",
+        config={
             "gn_per_host": GN_PER_HOST,
             "host_counts": list(HOST_COUNTS),
             "churn": "fleet-scale (~20 residents/host, util 0.02-0.05)",
         },
-        "admit": admit,
-        "single_host_cold_scalar": cold,
-        "cold_vs_fleet_speedup": round(
+        admit=admit,
+        single_host_cold_scalar=cold,
+        cold_vs_fleet_speedup=round(
             cold["mean_ms"] / biggest["mean_ms"], 2
         ),
-        "migration": migration,
-        "sim": sim,
-    }
+        migration=migration,
+        sim=sim,
+    )
 
     # the acceptance criterion this benchmark exists to track: batched
     # certification keeps fleet-scale federated admission under the PR-3
@@ -211,8 +217,7 @@ def run(rows: list | None = None, out: str = "BENCH_federation.json") -> dict:
     )
     assert migration["migrations"] > 0, "migration bench moved nothing"
 
-    with open(out, "w") as fh:
-        json.dump(result, fh, indent=2)
+    write_bench(out, result)
     for n_hosts in HOST_COUNTS:
         rows.append((f"federation,admit_mean_ms_{n_hosts}h",
                      admit[str(n_hosts)]["mean_ms"]))

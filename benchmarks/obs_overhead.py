@@ -1,0 +1,229 @@
+"""Observability overhead benchmark -> BENCH_obs.json.
+
+The metrics registry must be free when disabled (the default: a no-op
+singleton behind one early-returned call per hook) and cheap when
+enabled.  Two measurements over the same churn simulation:
+
+  wall-clock  A/B of the sim with metrics disabled vs enabled:
+              per-round order rotates and GC is quiesced around each
+              sample so clock drift and collection pauses hit both
+              sides equally; best-of-repeats per side.  Reported, and
+              asserted under a noise-aware ceiling (host timer jitter
+              on a ~100 ms sample is several percent).
+
+  attributed  the noise-free bound the <3% criterion is asserted on:
+              per-op cost of the write helpers (tight-loop timed) x the
+              number of metric writes one enabled sim actually performs,
+              as a fraction of the baseline sim wall-clock.
+
+The disabled path is additionally asserted ~free (attributed no-op cost
+well under 1%), which is what keeps goldens and benchmarks byte- and
+speed-identical by default.
+
+  PYTHONPATH=src python benchmarks/obs_overhead.py [--out BENCH_obs.json]
+"""
+from __future__ import annotations
+
+import argparse
+import gc
+import time
+
+from repro.core import generate_churn_trace, golden_scenario
+from repro.obs import metrics
+from repro.runtime import simulate_churn
+
+try:
+    from benchmarks._envelope import envelope, write_bench
+except ImportError:                      # run as a script from benchmarks/
+    from _envelope import envelope, write_bench
+
+#: the acceptance ceiling on the attributed (noise-free) enabled overhead
+MAX_ENABLED_OVERHEAD_PCT = 3.0
+#: wall-clock A/B ceiling: attributed cost + host timer jitter allowance
+MAX_WALLCLOCK_OVERHEAD_PCT = 10.0
+
+_PRESET = golden_scenario("churn_heavy")
+SEED = _PRESET.seed
+HORIZON = 6000.0
+REPEATS = 9
+_CAL_N = 50_000
+
+
+def _events():
+    return generate_churn_trace(seed=SEED, horizon=HORIZON - 1000.0,
+                                config=_PRESET.churn)
+
+
+def _one_sim(events) -> float:
+    gc.collect()
+    gc.disable()
+    try:
+        t0 = time.perf_counter()
+        simulate_churn(events, _PRESET.gn_total, HORIZON, seed=SEED)
+        return (time.perf_counter() - t0) * 1e3
+    finally:
+        gc.enable()
+
+
+def _wallclock_ab(events) -> dict:
+    """Interleaved best-of-``REPEATS`` disabled vs enabled sim (ms)."""
+    best = {"off": float("inf"), "on": float("inf")}
+    try:
+        for r in range(REPEATS):
+            # rotate per-round order so any periodic host noise (thermal
+            # throttling, cron ticks) cannot systematically bias one side
+            for cfg in (("off", "on") if r % 2 == 0 else ("on", "off")):
+                metrics.enable() if cfg == "on" else metrics.disable()
+                best[cfg] = min(best[cfg], _one_sim(events))
+    finally:
+        metrics.disable()
+    return best
+
+def _per_op_ns() -> dict:
+    """Tight-loop per-call cost of the module write helpers (ns)."""
+    out = {}
+    metrics.enable(fresh=True)
+    try:
+        t0 = time.perf_counter()
+        for _ in range(_CAL_N):
+            metrics.inc("obs_cal_counter_total", result="ok")
+        out["inc"] = (time.perf_counter() - t0) / _CAL_N * 1e9
+        t0 = time.perf_counter()
+        for _ in range(_CAL_N):
+            metrics.observe("obs_cal_hist", 42.0,
+                            buckets=metrics.DEFAULT_RESPONSE_BUCKETS,
+                            task="svc")
+        out["observe"] = (time.perf_counter() - t0) / _CAL_N * 1e9
+        t0 = time.perf_counter()
+        for _ in range(_CAL_N):
+            with metrics.timed("obs_cal_latency_ms"):
+                pass
+        out["timed"] = (time.perf_counter() - t0) / _CAL_N * 1e9
+    finally:
+        metrics.disable()
+    t0 = time.perf_counter()
+    for _ in range(_CAL_N):
+        metrics.inc("obs_cal_counter_total", result="ok")
+    out["noop"] = (time.perf_counter() - t0) / _CAL_N * 1e9
+    return {k: round(v, 1) for k, v in out.items()}
+
+
+def _count_writes(events) -> dict:
+    """Metric writes one enabled churn sim performs, by instrument kind."""
+    metrics.enable(fresh=True)
+    try:
+        simulate_churn(events, _PRESET.gn_total, HORIZON, seed=SEED)
+        snap = metrics.registry().snapshot()
+    finally:
+        metrics.disable()
+    counters = observations = series = 0
+    for fam in snap.values():
+        series += len(fam["series"])
+        for s in fam["series"].values():
+            if fam["kind"] == "histogram":
+                observations += s["count"]
+            else:
+                # counters record write *totals*, not write counts; the
+                # totals here are event counts incremented by 1 (or a
+                # per-event amount), so the total is an upper proxy
+                counters += int(s) if isinstance(s, (int, float)) else 0
+    return {"families": len(snap), "series": series,
+            "histogram_observations": observations,
+            "counter_total": round(counters, 1)}
+
+
+def run(rows: list | None = None, out: str = "BENCH_obs.json") -> dict:
+    rows = rows if rows is not None else []
+    events = _events()
+    assert not metrics.enabled(), (
+        "metrics must be off by default (REPRO_OBS leaked into this run?)"
+    )
+
+    # warm-up at both settings (imports, caches, allocator steady state)
+    _one_sim(events)
+    metrics.enable(fresh=True)
+    _one_sim(events)
+    metrics.disable()
+
+    best = _wallclock_ab(events)
+    per_op = _per_op_ns()
+    writes = _count_writes(events)
+
+    # attributed (noise-free) overhead: every write priced at the most
+    # expensive primitive, as a fraction of the disabled sim wall-clock
+    n_writes = writes["histogram_observations"] + writes["counter_total"]
+    worst_ns = max(per_op["inc"], per_op["observe"], per_op["timed"])
+    attributed_pct = round(
+        n_writes * worst_ns / (best["off"] * 1e6) * 100.0, 3
+    )
+    noop_pct = round(
+        n_writes * per_op["noop"] / (best["off"] * 1e6) * 100.0, 3
+    )
+    wallclock_pct = round((best["on"] / best["off"] - 1.0) * 100.0, 2)
+
+    result = envelope(
+        "obs",
+        config={
+            "scenario": _PRESET.name,
+            "gn_total": _PRESET.gn_total,
+            "seed": SEED,
+            "horizon_ms": HORIZON,
+            "repeats": REPEATS,
+            "timing": "interleaved best-of-repeats, GC quiesced",
+        },
+        disabled_ms=round(best["off"], 3),
+        enabled_ms=round(best["on"], 3),
+        overhead_wallclock_pct=wallclock_pct,
+        overhead_attributed_pct=attributed_pct,
+        overhead_disabled_pct=noop_pct,
+        per_op_ns=per_op,
+        writes=writes,
+    )
+
+    # the acceptance criteria this benchmark exists to track: enabled
+    # metrics cost <3% of the churn sim (noise-free attribution), the
+    # disabled no-op path ~0%, and the wall-clock A/B stays inside the
+    # attributed cost + host jitter allowance
+    assert attributed_pct < MAX_ENABLED_OVERHEAD_PCT, (
+        f"metrics-enabled instrumentation attributes to {attributed_pct}% "
+        f"of the churn sim (ceiling {MAX_ENABLED_OVERHEAD_PCT}%)"
+    )
+    assert noop_pct < 1.0, (
+        f"disabled no-op hooks attribute to {noop_pct}% — the off path "
+        f"is supposed to be free"
+    )
+    assert wallclock_pct < MAX_WALLCLOCK_OVERHEAD_PCT, (
+        f"wall-clock A/B shows {wallclock_pct}% slowdown with metrics on "
+        f"(jitter-aware ceiling {MAX_WALLCLOCK_OVERHEAD_PCT}%)"
+    )
+    assert writes["families"] > 0, "enabled run recorded nothing"
+
+    write_bench(out, result)
+    rows.append(("obs,overhead_attributed_pct", attributed_pct))
+    rows.append(("obs,overhead_wallclock_pct", wallclock_pct))
+    rows.append(("obs,overhead_disabled_pct", noop_pct))
+    rows.append(("obs,metrics_series", writes["series"]))
+    return result
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="BENCH_obs.json")
+    args = ap.parse_args()
+    r = run(out=args.out)
+    print(f"sim: disabled {r['disabled_ms']} ms vs enabled "
+          f"{r['enabled_ms']} ms (wall-clock {r['overhead_wallclock_pct']:+}%)")
+    print(f"attributed: {r['writes']['histogram_observations']} observations"
+          f" + ~{r['writes']['counter_total']:.0f} counter incs at "
+          f"{max(r['per_op_ns'].values()):.0f} ns worst-case = "
+          f"{r['overhead_attributed_pct']}% enabled, "
+          f"{r['overhead_disabled_pct']}% disabled "
+          f"(ceiling {MAX_ENABLED_OVERHEAD_PCT}%)")
+    print(f"{r['writes']['families']} metric families, "
+          f"{r['writes']['series']} series recorded")
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

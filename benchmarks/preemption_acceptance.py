@@ -31,8 +31,14 @@ import json
 import time
 
 from repro.core import generate_churn_trace, golden_scenario
+from repro.obs import BoundMonitor
 from repro.runtime import simulate_churn
 from repro.sched import DynamicController, EventTrace
+
+try:
+    from benchmarks._envelope import envelope, write_bench
+except ImportError:                      # run as a script from benchmarks/
+    from _envelope import envelope, write_bench
 
 #: single source of truth for the capacity-bound regime (many small
 #: long-lived services on a tiny pool — dedicated slices run out while
@@ -76,15 +82,44 @@ def _drive(ctl: DynamicController, seed: int) -> dict:
     }
 
 
+def _span_stages(trace: EventTrace) -> dict:
+    """Aggregate control-plane spans by stage name (count + wall-clock)."""
+    stages: dict = {}
+    for ev in trace.events:
+        if ev.kind != "span":
+            continue
+        agg = stages.setdefault(ev.task, {"count": 0, "total_ms": 0.0})
+        agg["count"] += 1
+        agg["total_ms"] += float(dict(ev.meta).get("dur_ms", 0.0))
+    for agg in stages.values():
+        agg["total_ms"] = round(agg["total_ms"], 3)
+    return stages
+
+
 def bench_admission(seed: int = SEED) -> dict:
+    # spans-enabled traces: the per-stage wall-clock attribution of the
+    # preemptive analysis-latency overhead (the certification runs inside
+    # the pinned sweep, so `pinned_sweep` carries the extra fixed points)
+    ded_trace = EventTrace(spans=True)
+    pre_trace = EventTrace(spans=True)
     ded = _drive(
-        DynamicController(GN_TOTAL, transition="instant"), seed
+        DynamicController(GN_TOTAL, transition="instant", trace=ded_trace),
+        seed,
     )
     pre = _drive(
         DynamicController(GN_TOTAL, transition="instant",
-                          preemption="priority", gpu_ctx_overhead=GPU_CTX),
+                          preemption="priority", gpu_ctx_overhead=GPU_CTX,
+                          trace=pre_trace),
         seed,
     )
+    ded_stages = _span_stages(ded_trace)
+    pre_stages = _span_stages(pre_trace)
+    overhead_by_stage = {
+        stage: round(pre_stages[stage]["total_ms"]
+                     / ded_stages[stage]["total_ms"], 3)
+        for stage in sorted(set(ded_stages) & set(pre_stages))
+        if ded_stages[stage]["total_ms"] > 0.0
+    }
     return {
         "dedicated": ded,
         "preemptive": pre,
@@ -93,6 +128,11 @@ def bench_admission(seed: int = SEED) -> dict:
         "analysis_latency_overhead": round(
             pre["mean_ms"] / ded["mean_ms"], 3
         ) if ded["mean_ms"] else None,
+        "stages": {
+            "dedicated": ded_stages,
+            "preemptive": pre_stages,
+            "overhead_by_stage": overhead_by_stage,
+        },
     }
 
 
@@ -100,15 +140,18 @@ def bench_sim(seed: int = SEED) -> dict:
     events = _events(seed=seed)
     rn = simulate_churn(events, GN_TOTAL, horizon=5000.0, seed=seed)
     trace = EventTrace()
+    monitor = BoundMonitor()
     rp = simulate_churn(events, GN_TOTAL, horizon=5000.0, seed=seed,
                         preemption="priority", gpu_ctx_overhead=GPU_CTX,
-                        trace=trace)
+                        trace=trace, monitor=monitor)
     extra = sorted(set(rp.admitted) - set(rn.admitted))
     preempts = sum(
         1 for ev in trace.events
         if ev.kind == "preempt" and dict(ev.meta).get("resource") == "gpu"
     )
     violations = rp.bound_violations()
+    gauges = monitor.gauges()
+    msum = monitor.summary()
     out = {
         "admitted_dedicated": len(rn.admitted),
         "admitted_preemptive": len(rp.admitted),
@@ -117,11 +160,27 @@ def bench_sim(seed: int = SEED) -> dict:
         "gpu_preemptions": preempts,
         "deadline_misses": sum(rp.misses.values()),
         "bound_violations": len(violations),
+        "monitor": {
+            "tasks_gauged": len(gauges),
+            "min_headroom": round(
+                min(g["min_headroom"] for g in gauges.values()), 4
+            ) if gauges else None,
+            "alerts": monitor.alert_counts(),
+            "totals": msum["totals"],
+        },
     }
     assert extra, "no task set admitted preemptively that dedication rejects"
     assert not rp.any_miss, f"preemptive deadline misses: {rp.misses}"
     assert not violations, f"preemptive bound violations: {violations[:3]}"
     assert preempts > 0, "scenario exercised no GPU preemption"
+    # the runtime monitor must see every admitted service (≥1 headroom
+    # gauge per resident task) and raise no false bound-violation alarms
+    # on a run where observed R ≤ certified R̂ held throughout
+    missing = sorted(set(rp.admitted) - set(gauges))
+    assert not missing, f"monitor missed resident tasks: {missing}"
+    assert not any(a.kind == "bound_violation" for a in monitor.alerts), (
+        "false bound-violation alert on a violation-free run"
+    )
     return out
 
 
@@ -129,16 +188,17 @@ def run(rows: list | None = None, out: str = "BENCH_preempt.json") -> dict:
     rows = rows if rows is not None else []
     admission = bench_admission()
     sim = bench_sim()
-    result = {
-        "config": {
+    result = envelope(
+        "preemption",
+        config={
             "gn_total": GN_TOTAL,
             "gpu_ctx_overhead": GPU_CTX,
             "seed": SEED,
             "churn": "capacity-bound (util 0.03-0.08, long residencies)",
         },
-        "admission": admission,
-        "sim": sim,
-    }
+        admission=admission,
+        sim=sim,
+    )
 
     # the acceptance criterion this benchmark exists to track: preemptive
     # slices recover admissions that dedicated capacity wastes
@@ -147,8 +207,7 @@ def run(rows: list | None = None, out: str = "BENCH_preempt.json") -> dict:
             f"no admission-rate gain: {admission['admission_rate_gain']}"
         )
 
-    with open(out, "w") as fh:
-        json.dump(result, fh, indent=2)
+    write_bench(out, result)
     rows.append(("preemption,admission_rate_gain",
                  admission["admission_rate_gain"]))
     rows.append(("preemption,analysis_latency_overhead",
@@ -177,12 +236,19 @@ def main() -> int:
     print(f"analysis latency: {a['dedicated']['mean_ms']} ms -> "
           f"{a['preemptive']['mean_ms']} ms per admission "
           f"({a['analysis_latency_overhead']}x overhead)")
+    for stage, ratio in a["stages"]["overhead_by_stage"].items():
+        ded_ms = a["stages"]["dedicated"][stage]["total_ms"]
+        pre_ms = a["stages"]["preemptive"][stage]["total_ms"]
+        print(f"  stage {stage}: {ded_ms} ms -> {pre_ms} ms ({ratio}x)")
     s = r["sim"]
     print(f"sim: +{len(s['extra_over_dedication'])} services over "
           f"dedication, {s['jobs_preemptive']} jobs, "
           f"{s['gpu_preemptions']} GPU preemptions, "
           f"{s['deadline_misses']} misses, "
           f"{s['bound_violations']} bound violations")
+    m = s["monitor"]
+    print(f"monitor: {m['tasks_gauged']} tasks gauged, min headroom "
+          f"{m['min_headroom']}, alerts {m['alerts'] or 'none'}")
     print(f"wrote {args.out}")
     return 0
 

@@ -47,6 +47,11 @@ from repro.core.rta import RtgpuIncremental
 from repro.core.rta_batch import BatchAnalyzer, grid_search_frontier
 from repro.sched import DynamicController
 
+try:
+    from benchmarks._envelope import envelope, write_bench
+except ImportError:                      # run as a script from benchmarks/
+    from _envelope import envelope, write_bench
+
 GN_TOTAL = 10
 MAX_CANDIDATES = 400
 UTILS = (0.3, 0.6, 0.9, 1.2, 1.6)
@@ -209,18 +214,19 @@ def run(rows: list | None = None, out: str = "BENCH_rta.json") -> dict:
     analysis = bench_analysis(work)
     search = bench_search(work)
     admit = bench_admit()
-    result = {
-        "config": {
+    result = envelope(
+        "rta",
+        config={
             "gn_total": GN_TOTAL,
             "max_candidates": MAX_CANDIDATES,
             "utils": list(UTILS),
             "task_sets": len(work),
             "generator": "Table-1 defaults (N=5, M=5)",
         },
-        "analysis": analysis,
-        "search": search,
-        "admit": admit,
-    }
+        analysis=analysis,
+        search=search,
+        admit=admit,
+    )
 
     # the acceptance criterion this benchmark exists to track
     assert analysis["speedup"] >= MIN_ANALYSIS_SPEEDUP, (
@@ -231,8 +237,7 @@ def run(rows: list | None = None, out: str = "BENCH_rta.json") -> dict:
         "frontier search slower per candidate than the scalar DFS"
     )
 
-    with open(out, "w") as fh:
-        json.dump(result, fh, indent=2)
+    write_bench(out, result)
     rows.append(("rta,analysis_speedup", analysis["speedup"]))
     rows.append(("rta,batched_candidates_per_sec",
                  analysis["batched_candidates_per_sec"]))

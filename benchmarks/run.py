@@ -12,6 +12,14 @@ import argparse
 import sys
 import time
 
+#: every stage name `--only` accepts, in execution order; a typo'd name
+#: is an error up front, not a silently empty run
+STAGES = (
+    "fig4", "fig6", "fig8", "fig9", "fig10", "fig11", "fig12",
+    "churn", "rta", "federation", "preemption", "obs",
+    "roofline", "roofline_multipod",
+)
+
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
@@ -19,10 +27,15 @@ def main(argv=None) -> int:
     ap.add_argument("--sets", type=int, default=None,
                     help="tasksets per utilization level")
     ap.add_argument("--only", default=None,
-                    help="comma-separated subset: fig4,fig6,fig8,...,roofline")
+                    help="comma-separated subset of: " + ",".join(STAGES))
     args = ap.parse_args(argv)
     n_sets = args.sets or (100 if args.full else 6)
     only = set(args.only.split(",")) if args.only else None
+    if only:
+        unknown = sorted(only - set(STAGES))
+        if unknown:
+            ap.error(f"unknown --only stage(s): {', '.join(unknown)} "
+                     f"(choose from {', '.join(STAGES)})")
 
     rows: list = []
     t0 = time.time()
@@ -40,6 +53,7 @@ def main(argv=None) -> int:
         fig4_kernel_scaling,
         fig6_interleave,
         fig12_system_validation,
+        obs_overhead,
         preemption_acceptance,
         roofline_table,
         rta_throughput,
@@ -57,6 +71,7 @@ def main(argv=None) -> int:
     stage("rta", rta_throughput.run, rows)
     stage("federation", federation_acceptance.run, rows)
     stage("preemption", preemption_acceptance.run, rows)
+    stage("obs", obs_overhead.run, rows)
     stage("roofline", roofline_table.run, rows)
     stage("roofline_multipod", roofline_table.run, rows, mesh="2x16x16")
 

@@ -39,6 +39,8 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from repro.obs import metrics
+
 from .backend import get_backend
 from .rta import (
     AnalysisTables,
@@ -256,6 +258,7 @@ class _NumpyEngine:
         B, J = base.shape
         if B == 0 or J == 0:
             return np.zeros((B, J))
+        metrics.inc("rta_batch_calls_total")
         # Per-call precomputation: one stacked array set per part, plus each
         # group's candidate-row -> pair-index column and per-variant masks.
         prep = []
@@ -283,6 +286,8 @@ class _NumpyEngine:
             if bi.size == 0:
                 break
             if bi.size <= self._TAIL:
+                # convergence stragglers handed to the scalar tail loop
+                metrics.inc("rta_batch_stragglers_total", amount=bi.size)
                 for b, j in zip(bi.tolist(), ji.tolist()):
                     res[b, j] = self._scalar_tail(
                         base[b, j], x[b, j], limit, parts, const, b,
@@ -327,6 +332,7 @@ class _NumpyEngine:
             x[bi[cont], ji[cont]] = nx[cont]
             done = over | conv
             active[bi[done], ji[done]] = False
+        metrics.inc("rta_batch_iters_total", amount=it + 1)
         return res
 
     @staticmethod
@@ -836,6 +842,8 @@ class BatchAnalyzer:
         prefixes = np.asarray(prefixes, dtype=np.int64)
         if prefixes.ndim != 2 or prefixes.shape[1] != k + 1:
             raise ValueError(f"need a (B, {k + 1}) prefix matrix")
+        metrics.observe("rta_frontier_width", prefixes.shape[0],
+                        buckets=metrics.DEFAULT_RESPONSE_BUCKETS)
         parents_full = prefixes[:, :k]
         g = prefixes[:, k]
         if dedupe and parents_full.shape[0] > 1:

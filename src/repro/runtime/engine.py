@@ -55,6 +55,7 @@ import math
 from typing import Hashable, Optional
 
 from repro.core import SegmentKind
+from repro.obs import metrics
 from repro.sched import EventTrace
 
 __all__ = ["EngineJob", "SchedulingPolicy", "DiscreteEventEngine"]
@@ -205,6 +206,9 @@ class DiscreteEventEngine:
         gpu_mode, gpu_ctx = policy.gpu_arbitration()
         if gpu_mode not in ("none", "priority"):
             raise ValueError(f"unknown GPU arbitration mode {gpu_mode!r}")
+        # observability is read once per run (like the arbitration model):
+        # when off, the loop pays nothing beyond this flag
+        obs = metrics.enabled()
         while self.now < horizon - policy.horizon_slack:
             # 1. external events, then releases due now
             policy.begin_step(self.now)
@@ -232,12 +236,13 @@ class DiscreteEventEngine:
                 )
                 last = self._last_cpu_owner.get(g)
                 if (
-                    self.trace is not None
+                    (self.trace is not None or obs)
                     and last is not None
                     and cpu_owner != last
                     and self.seg_kind(last) is SegmentKind.CPU
                     and self.jobs[last].remaining > _EPS
                 ):
+                    metrics.inc("engine_cpu_preemptions_total")
                     self.record(
                         "preempt", last,
                         by=policy.display_name(cpu_owner)
@@ -296,6 +301,9 @@ class DiscreteEventEngine:
                         # it when it re-acquires the GPU
                         self.jobs[last].remaining += gpu_ctx
                         self._gpu_preempted.add(last)
+                        metrics.inc("engine_gpu_preemptions_total")
+                        metrics.inc("engine_gpu_ctx_charged_total",
+                                    amount=gpu_ctx)
                         self.record(
                             "preempt", last, resource="gpu",
                             by=policy.display_name(owner)
@@ -346,5 +354,15 @@ class DiscreteEventEngine:
                 if job.seg_idx < len(job.chain):
                     job.remaining = job.durations[job.seg_idx]
                     continue
+                if obs:
+                    response = self.now - job.release
+                    metrics.inc("engine_jobs_completed_total")
+                    metrics.observe(
+                        "engine_response", response,
+                        buckets=metrics.DEFAULT_RESPONSE_BUCKETS,
+                        task=policy.display_name(k),
+                    )
+                    if self.now > job.deadline_abs + _EPS:
+                        metrics.inc("engine_deadline_misses_total")
                 policy.on_job_complete(k, job, self.now,
                                        self.now - job.release)

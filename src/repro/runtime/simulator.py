@@ -398,12 +398,23 @@ def simulate_churn(
     trace: Optional[EventTrace] = None,
     preemption: str = "none",
     gpu_ctx_overhead: float = 0.0,
+    monitor=None,
 ) -> ChurnSimResult:
     """Execute an admit/release churn trace under the online scheduler.
 
     ``preemption``/``gpu_ctx_overhead`` select the GPU arbitration model
     for the default controller; the engine always executes whatever
-    arbitration the (possibly caller-provided) controller certified."""
+    arbitration the (possibly caller-provided) controller certified.
+
+    ``monitor`` (a :class:`repro.obs.BoundMonitor`) is attached to the
+    run's event trace — an internal one is created when ``trace`` is not
+    given — and observes every scheduler/engine event live, tracking
+    observed R against certified R̂ per task.  Attaching never alters the
+    trace or the simulation."""
+    if monitor is not None:
+        if trace is None:
+            trace = EventTrace()
+        monitor.attach(trace)
     if controller is None:
         controller = DynamicController(
             gn_total,
@@ -675,8 +686,17 @@ def simulate_fleet(
     preemption: str = "none",
     gpu_ctx_overhead: float = 0.0,
     host_speeds: Optional[Sequence[float]] = None,
+    monitor=None,
 ) -> FleetSimResult:
-    """Execute a churn trace across ``n_hosts`` broker-routed hosts."""
+    """Execute a churn trace across ``n_hosts`` broker-routed hosts.
+
+    ``monitor`` behaves as in :func:`simulate_churn`: attached to the
+    run's event trace (created internally when ``trace`` is not given)
+    to track observed R vs certified R̂ without touching the trace."""
+    if monitor is not None:
+        if trace is None:
+            trace = EventTrace()
+        monitor.attach(trace)
     if broker is None:
         broker = CapacityBroker.build(
             n_hosts, gn_per_host,

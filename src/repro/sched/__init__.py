@@ -36,7 +36,7 @@ from .federation import (
     Migration,
     register_placement,
 )
-from .trace import EventTrace, HostTrace, TraceEvent
+from .trace import KINDS, SPAN_NAMES, EventTrace, HostTrace, TraceEvent
 
 __all__ = [
     "Entry",
@@ -56,4 +56,6 @@ __all__ = [
     "EventTrace",
     "HostTrace",
     "TraceEvent",
+    "KINDS",
+    "SPAN_NAMES",
 ]

@@ -44,6 +44,7 @@ from repro.core import AnalysisTables, PreemptionModel, RTTask, TaskSet
 from repro.core.federated import FederatedResult, grid_search_dfs
 from repro.core.rta import RtgpuIncremental, bus_blocking
 from repro.core.rta_batch import BatchAnalyzer, grid_search_frontier
+from repro.obs import metrics
 
 from .capacity import Entry
 
@@ -153,12 +154,19 @@ class CertificationEngine(abc.ABC):
                     prefix = interf_vec[:k] + [self_vec[k]]
                     ta = inc.analyze_task(k, prefix)
                     analyses += 1
+                    metrics.inc("certify_memo_misses_total")
                     r = ta.response if ta.schedulable else math.inf
                     memo[key] = r
+                else:
+                    metrics.inc("certify_memo_hits_total")
                 if not math.isfinite(r):
+                    metrics.inc("certify_analyses_total", amount=analyses,
+                                engine=self.name)
                     return None, analyses, f"task {e.task.name!r} unschedulable"
                 worst = max(worst, r)
             bounds[e.task.name] = worst
+        metrics.inc("certify_analyses_total", amount=analyses,
+                    engine=self.name)
         return bounds, analyses, ""
 
     def _pinned_scalar(

@@ -65,6 +65,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from typing import Optional
 
 from repro.core import (
@@ -74,6 +75,7 @@ from repro.core import (
     TaskSet,
 )
 from repro.core.rta import RtgpuIncremental, SetAnalysis
+from repro.obs import metrics
 
 from .capacity import Entry, SlicePool
 from .certify import make_certifier
@@ -304,6 +306,22 @@ class DynamicController:
         fail identically and needn't be repeated before the re-balance
         search.
         """
+        with metrics.timed("sched_admit_latency_ms"):
+            dec = self._admit(task, t, allow_realloc, pinned)
+        metrics.inc("sched_admit_total",
+                    result="admitted" if dec.admitted else "rejected",
+                    path=dec.path or "none")
+        metrics.observe("sched_admit_candidates", dec.tried,
+                        buckets=metrics.DEFAULT_RESPONSE_BUCKETS)
+        return dec
+
+    def _admit(
+        self,
+        task: RTTask,
+        t: float,
+        allow_realloc: Optional[bool],
+        pinned: bool,
+    ) -> SchedDecision:
         name = task.name
         if not name:
             return self._reject(task, t, "task must have a name")
@@ -327,11 +345,21 @@ class DynamicController:
         memo = dict(self._memo)
         pool = self._pool.fork()
         residents = pool.entries()
+        spans = self.trace is not None and getattr(self.trace, "spans", False)
 
         if g_min is not None and pinned:
+            t0 = time.perf_counter() if spans else 0.0
             g_sel, bounds, tried = self._certifier.pinned_sweep(
                 task, residents, fork, memo, g_min, free
             )
+            if spans:
+                self.trace.span(
+                    t, "pinned_sweep", (time.perf_counter() - t0) * 1e3,
+                    target=name, tried=tried,
+                    hit=g_sel is not None,
+                )
+            metrics.inc("sched_pinned_sweeps_total",
+                        result="hit" if g_sel is not None else "miss")
             if g_sel is not None:
                 cand = Entry(task=task, alloc=g_sel)
                 return self._commit_admit(cand, bounds, pool, fork, memo, t,
@@ -350,9 +378,15 @@ class DynamicController:
         realloc_ran = False
         if realloc_ok and self.transition == "instant" \
                 and not self.preemption.enabled:
+            t0 = time.perf_counter() if spans else 0.0
             dec, dfs_tried = self._admit_realloc(
                 task, pool, fork, memo, t, tried
             )
+            if spans:
+                self.trace.span(
+                    t, "grid_search", (time.perf_counter() - t0) * 1e3,
+                    target=name, tried=dfs_tried, hit=dec is not None,
+                )
             if dec is not None:
                 return dec
             tried += dfs_tried
@@ -478,6 +512,7 @@ class DynamicController:
         e = self._pool.reclaim(name)
         self._bounds.pop(name, None)
         self.epoch += 1
+        metrics.inc("sched_reclaim_total")
         if self.trace is not None:
             self.trace.record(t, "reclaim", name, gn=e.alloc)
 
@@ -536,9 +571,19 @@ class DynamicController:
             cand.staged_task = new_task
         fork = self._tables.fork()
         memo = dict(self._memo)
-        bounds, analyses, reason = self._certifier.certify(
-            cands, fork, memo, probe=name
-        )
+        spans = self.trace is not None and getattr(self.trace, "spans", False)
+        t0 = time.perf_counter() if spans else 0.0
+        with metrics.timed("sched_update_latency_ms"):
+            bounds, analyses, reason = self._certifier.certify(
+                cands, fork, memo, probe=name
+            )
+        if spans:
+            self.trace.span(
+                t, "certify", (time.perf_counter() - t0) * 1e3,
+                target=name, tried=analyses, hit=bounds is not None,
+            )
+        metrics.inc("sched_update_total",
+                    result="admitted" if bounds is not None else "rejected")
         if bounds is None:
             return SchedDecision(
                 False, None, None, tried=analyses,
@@ -551,8 +596,14 @@ class DynamicController:
         self._trim_caches()
         self.epoch += 1
         if self.trace is not None:
+            extra = {}
+            if metrics.enabled():
+                # obs-gated enrichment: the report CLI / BoundMonitor can
+                # then track R̂ from the trace alone.  Off by default so
+                # the golden corpus stays byte-identical.
+                extra = {"bound": round(bounds[name], 6), "gn": cand.alloc}
             self.trace.record(t, "update", name, period=period,
-                              deadline=deadline)
+                              deadline=deadline, **extra)
         return SchedDecision(
             admitted=True,
             alloc=self.target_allocation,

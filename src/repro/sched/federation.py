@@ -55,9 +55,11 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from typing import Callable, Optional, Sequence, Union
 
 from repro.core import RTTask, TaskSet
+from repro.obs import metrics
 
 from .controller import DynamicController, SchedDecision
 from .trace import EventTrace
@@ -338,7 +340,17 @@ class CapacityBroker:
                 False, None, None, (),
                 reason=f"name {name!r} already resident in the fleet",
             )
-        order = self._placement_order(task)
+        spans = self.trace is not None and getattr(self.trace, "spans", False)
+        t0 = time.perf_counter() if spans else 0.0
+        with metrics.timed("fleet_placement_ms"):
+            order = self._placement_order(task)
+        if spans:
+            self.trace.span(
+                t, "placement", (time.perf_counter() - t0) * 1e3,
+                target=name, policy=(self.placement if
+                                     isinstance(self.placement, str)
+                                     else "custom"),
+            )
         tried: list[int] = []
         last: Optional[SchedDecision] = None
         for h in order:
@@ -347,6 +359,7 @@ class CapacityBroker:
             last = dec
             if dec.admitted:
                 self._active[name] = h
+                self._count_admit(True, tried)
                 return BrokerDecision(True, h, dec, tuple(tried))
         realloc_order = [
             h for h in sorted(
@@ -362,12 +375,21 @@ class CapacityBroker:
             last = dec
             if dec.admitted:
                 self._active[name] = h
+                self._count_admit(True, tried)
                 return BrokerDecision(True, h, dec, tuple(tried))
         reason = (
             f"rejected by all {len(tried)} hosts"
             + (f" (last: {last.reason})" if last is not None else "")
         )
+        self._count_admit(False, tried)
         return BrokerDecision(False, None, last, tuple(tried), reason=reason)
+
+    @staticmethod
+    def _count_admit(admitted: bool, tried: list) -> None:
+        metrics.inc("fleet_admit_total",
+                    result="admitted" if admitted else "rejected")
+        metrics.observe("fleet_hosts_tried", len(tried),
+                        buckets=metrics.DEFAULT_RESPONSE_BUCKETS)
 
     def release(self, name: str, t: float = 0.0) -> bool:
         """Depart ``name`` from the fleet (release-at-boundary on its
@@ -474,15 +496,30 @@ class CapacityBroker:
             if loads[src] - gain < loads[dst] + cost \
                     - self.imbalance_threshold:
                 continue
+            spans = (self.trace is not None
+                     and getattr(self.trace, "spans", False))
+            t0 = time.perf_counter() if spans else 0.0
             dec = dst_ctl.admit(e.task, t=t)   # envelope-certified, or skip
+            if spans:
+                self.trace.span(
+                    t, "migrate", (time.perf_counter() - t0) * 1e3,
+                    target=name, src=src, dst=dst, hit=dec.admitted,
+                )
             if not dec.admitted:
                 continue
             src_ctl.release(name, t=t)         # release-at-boundary
+            metrics.inc("fleet_migrations_total")
             mig = Migration(name=name, src=src, dst=dst, started=t)
             if self.trace is not None:
+                extra = {}
+                if metrics.enabled() and dec.bounds:
+                    # obs-gated: certified R̂ on the target, so the report
+                    # CLI tracks bounds across moves from the trace alone
+                    extra = {"bound": round(dec.bounds.get(name,
+                                                           math.inf), 6)}
                 self.trace.record(t, "migrate", name, src=src, dst=dst,
                                   gn=dec.alloc[name] if dec.alloc else None,
-                                  host=src)
+                                  host=src, **extra)
             if name not in src_ctl.pool:
                 # instant-transition source: reclaimed at once — the
                 # migration completes immediately

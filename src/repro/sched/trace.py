@@ -38,18 +38,25 @@ import dataclasses
 import json
 from typing import Iterable, Optional
 
-__all__ = ["TraceEvent", "EventTrace", "HostTrace"]
+__all__ = ["TraceEvent", "EventTrace", "HostTrace", "KINDS", "SPAN_NAMES"]
 
 #: kinds that open/close a job duration slice in the Chrome export
 _JOB_BEGIN = "release"
 _JOB_END = "complete"
 
 #: every kind the runtime layers emit (documented contract, not enforced);
-#: "migrate" is the broker's departure-imbalance move instant
+#: "migrate" is the broker's departure-imbalance move instant; "span" and
+#: "ctr" are the opt-in control-plane rows (analysis-stage durations and
+#: gauge samples — see :meth:`EventTrace.span` / :meth:`EventTrace.counter`)
 KINDS = (
     "admit", "reject", "depart", "reclaim", "update", "realloc", "migrate",
     "release", "start", "preempt", "resume", "complete", "miss",
+    "span", "ctr",
 )
+
+#: control-plane span names the analysis layers emit when spans are on
+SPAN_NAMES = ("certify", "pinned_sweep", "grid_search", "placement",
+              "migrate")
 
 
 def _jsonify(value):
@@ -83,10 +90,17 @@ class EventTrace:
     (``us_per_unit=1e6``).
     """
 
-    def __init__(self, us_per_unit: float = 1000.0, label: str = "rtgpu"):
+    def __init__(self, us_per_unit: float = 1000.0, label: str = "rtgpu",
+                 spans: bool = False):
         self.us_per_unit = us_per_unit
         self.label = label
+        #: opt-in control-plane rows: when False (the default) the
+        #: :meth:`span`/:meth:`counter` recorders are no-ops, so traces —
+        #: and the golden corpus built on them — are byte-identical to the
+        #: pre-observability format
+        self.spans = spans
         self.events: list[TraceEvent] = []
+        self._subscribers: tuple = ()
 
     def record(self, t: float, kind: str, task: str, **meta) -> TraceEvent:
         ev = TraceEvent(
@@ -94,7 +108,35 @@ class EventTrace:
             meta=tuple(sorted((k, _jsonify(v)) for k, v in meta.items())),
         )
         self.events.append(ev)
+        for cb in self._subscribers:
+            cb(ev)
         return ev
+
+    def attach(self, callback) -> "EventTrace":
+        """Subscribe ``callback(event)`` to every subsequently recorded
+        event.  Subscribers observe the stream; they cannot alter it —
+        the recorded trace (and its byte-exact dump) is unaffected.  This
+        is the seam a live :class:`~repro.obs.BoundMonitor` hangs off."""
+        self._subscribers = self._subscribers + (callback,)
+        return self
+
+    def span(self, t: float, name: str, dur_ms: float, **meta) -> Optional[TraceEvent]:
+        """Record a control-plane span: an analysis-domain stage (one of
+        :data:`SPAN_NAMES`, or any other label) that took ``dur_ms`` of
+        *wall-clock* time, anchored at model-time ``t``.  No-op unless
+        the trace was built with ``spans=True``."""
+        if not self.spans:
+            return None
+        return self.record(t, "span", name, dur_ms=round(float(dur_ms), 6),
+                           **meta)
+
+    def counter(self, t: float, name: str, **values) -> Optional[TraceEvent]:
+        """Record a Chrome counter sample (``ph: "C"``): named series
+        values at model-time ``t`` (e.g. per-task headroom gauges).
+        No-op unless the trace was built with ``spans=True``."""
+        if not self.spans:
+            return None
+        return self.record(t, "ctr", name, **values)
 
     def for_host(self, host: int) -> "HostTrace":
         """Scoped recorder appending to THIS trace with ``host=<host>``
@@ -235,6 +277,24 @@ class EventTrace:
             ts = ev.t * self.us_per_unit
             meta = dict(ev.meta)
             pid = pid_of(meta)
+            if ev.kind == "span":
+                # control-plane stage: a complete ("X") slice on a dedicated
+                # per-host row, anchored at model-time t with its wall-clock
+                # dur_ms rendered as the slice width — Perfetto then shows
+                # analysis cost stacked against the data-plane timeline
+                rows.append({
+                    "pid": pid, "tid": tid(pid, "control-plane"), "ts": ts,
+                    "cat": "control", "name": ev.task, "ph": "X",
+                    "dur": meta.get("dur_ms", 0.0) * 1e3, "args": meta,
+                })
+                continue
+            if ev.kind == "ctr":
+                rows.append({
+                    "pid": pid, "tid": 0, "ts": ts, "cat": "control",
+                    "name": ev.task, "ph": "C",
+                    "args": {k: v for k, v in meta.items() if k != "host"},
+                })
+                continue
             base = {"pid": pid, "tid": tid(pid, ev.task), "ts": ts,
                     "cat": "sched", "args": meta}
             if ev.kind == begin_kind:
@@ -269,6 +329,22 @@ class HostTrace:
     def record(self, t: float, kind: str, task: str, **meta) -> TraceEvent:
         meta.setdefault("host", self.host)
         return self.parent.record(t, kind, task, **meta)
+
+    @property
+    def spans(self) -> bool:
+        return self.parent.spans
+
+    def span(self, t: float, name: str, dur_ms: float, **meta):
+        meta.setdefault("host", self.host)
+        return self.parent.span(t, name, dur_ms, **meta)
+
+    def counter(self, t: float, name: str, **values):
+        values.setdefault("host", self.host)
+        return self.parent.counter(t, name, **values)
+
+    def attach(self, callback) -> "HostTrace":
+        self.parent.attach(callback)
+        return self
 
     @property
     def events(self) -> list[TraceEvent]:

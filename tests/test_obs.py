@@ -1,0 +1,469 @@
+"""Observability stack: metrics registry, bound monitor, spans, report.
+
+Four contracts:
+
+  registry    deterministic snapshots, Prometheus text shape, the no-op
+              default (module helpers cost nothing and record nothing
+              until :func:`repro.obs.metrics.enable`), cache coherence
+              across enable(fresh=True) cycles
+
+  monitor     per-task headroom/drift bookkeeping over duck-typed
+              scheduler events, alert semantics (violation, miss,
+              latched erosion), the no-false-alarms property (observed
+              R ≤ certified R̂ ⇒ zero bound_violation alerts), and the
+              certified re-admission callback seam
+
+  identity    attaching a monitor and/or enabling metrics never changes
+              a recorded trace byte — the golden corpus stays valid
+              with observability on
+
+  surfaces    control-plane spans (opt-in, Chrome "X"/"C" rows) and the
+              ``python -m repro.obs.report`` CLI over a golden doc
+"""
+import json
+import math
+from pathlib import Path
+
+import pytest
+
+from repro.core import generate_churn_trace, golden_scenario
+from repro.obs import (
+    Alert,
+    BoundMonitor,
+    make_readmit_callback,
+    metrics,
+)
+from repro.runtime import simulate_churn
+from repro.sched import SPAN_NAMES, DynamicController, EventTrace
+
+GOLDEN_DIR = Path(__file__).parent / "golden"
+
+
+@pytest.fixture(autouse=True)
+def _metrics_off():
+    """Every test starts and ends with the default (disabled) registry."""
+    metrics.disable()
+    yield
+    metrics.disable()
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+
+class TestMetricsRegistry:
+    def test_disabled_by_default_and_helpers_are_noops(self):
+        assert not metrics.enabled()
+        metrics.inc("t_total")
+        metrics.set_gauge("t_gauge", 3.0)
+        metrics.observe("t_hist", 1.0)
+        assert metrics.registry().snapshot() == {}
+
+    def test_counter_gauge_histogram_roundtrip(self):
+        reg = metrics.enable(fresh=True)
+        metrics.inc("t_total", result="ok")
+        metrics.inc("t_total", amount=2.0, result="ok")
+        metrics.inc("t_total", result="err")
+        metrics.set_gauge("t_gauge", 7.5)
+        for v in (0.5, 3.0, 250.0):
+            metrics.observe("t_resp", v,
+                            buckets=metrics.DEFAULT_RESPONSE_BUCKETS)
+        assert reg.value("t_total", result="ok") == 3.0
+        assert reg.value("t_total", result="err") == 1.0
+        assert reg.value("t_gauge") == 7.5
+        snap = reg.snapshot()
+        hist = snap["t_resp"]["series"][""]
+        assert hist["count"] == 3
+        assert hist["sum"] == pytest.approx(253.5)
+        assert hist["buckets"]["1.0"] == 1      # 0.5
+        assert hist["buckets"]["5.0"] == 1      # 3.0
+        assert hist["buckets"]["500.0"] == 1    # 250.0
+        assert hist["buckets"]["+Inf"] == 0
+
+    def test_snapshot_is_deterministic(self):
+        def record():
+            metrics.enable(fresh=True)
+            metrics.inc("b_total", host="1")
+            metrics.inc("a_total")
+            metrics.observe("c_hist", 2.0, task="x")
+            metrics.observe("c_hist", 9.0, task="a")
+            return metrics.registry().to_json()
+
+        assert record() == record()
+        families = list(metrics.registry().snapshot())
+        assert families == sorted(families)
+
+    def test_prometheus_text_shape(self):
+        reg = metrics.enable(fresh=True)
+        metrics.inc("req_total", amount=4.0, code="200")
+        metrics.observe("lat_ms", 0.3,
+                        buckets=(0.1, 1.0), route="/x")
+        text = reg.to_prometheus()
+        assert '# TYPE req_total counter' in text
+        assert 'req_total{code="200"} 4' in text
+        assert '# TYPE lat_ms histogram' in text
+        # cumulative le buckets and the +Inf catch-all
+        assert 'lat_ms_bucket{route="/x",le="0.1"} 0' in text
+        assert 'lat_ms_bucket{route="/x",le="1"} 1' in text
+        assert 'lat_ms_bucket{route="/x",le="+Inf"} 1' in text
+        assert 'lat_ms_sum{route="/x"} 0.3' in text
+        assert 'lat_ms_count{route="/x"} 1' in text
+
+    def test_kind_collision_rejected(self):
+        reg = metrics.enable(fresh=True)
+        reg.counter("dual")
+        with pytest.raises(ValueError, match="already registered"):
+            reg.histogram("dual")
+
+    def test_bad_histogram_edges_rejected(self):
+        reg = metrics.enable(fresh=True)
+        with pytest.raises(ValueError, match="increasing"):
+            reg.histogram("bad", buckets=(5.0, 1.0))
+
+    def test_fresh_enable_resets_write_cache(self):
+        # the write-path memo must not leak instruments across resets
+        metrics.enable(fresh=True)
+        metrics.inc("cached_total", k="v")
+        metrics.enable(fresh=True)
+        metrics.inc("cached_total", k="v")
+        assert metrics.registry().value("cached_total", k="v") == 1.0
+
+    def test_timed_records_only_when_enabled(self):
+        with metrics.timed("off_ms") as t_off:
+            pass
+        assert t_off.ms == 0.0
+        reg = metrics.enable(fresh=True)
+        with metrics.timed("on_ms") as t_on:
+            sum(range(100))
+        assert t_on.ms > 0.0
+        assert reg.snapshot()["on_ms"]["series"][""]["count"] == 1
+
+
+# ---------------------------------------------------------------------------
+# bound monitor
+# ---------------------------------------------------------------------------
+
+
+def _mk_trace(monitor: BoundMonitor) -> EventTrace:
+    trace = EventTrace()
+    monitor.attach(trace)
+    return trace
+
+
+class TestBoundMonitor:
+    def test_admit_creates_gauge_before_first_completion(self):
+        mon = BoundMonitor()
+        tr = _mk_trace(mon)
+        tr.record(0.0, "admit", "svc0", bound=40.0, gn=3)
+        assert "svc0" in mon.gauges()
+        assert mon.headroom("svc0") == 1.0
+        assert mon.tasks["svc0"].bound == 40.0
+        assert mon.tasks["svc0"].alloc == 3
+
+    def test_headroom_and_ewma_drift(self):
+        mon = BoundMonitor(ewma_alpha=0.5)
+        tr = _mk_trace(mon)
+        tr.record(0.0, "admit", "svc0", bound=100.0)
+        tr.record(10.0, "complete", "svc0", response=40.0)
+        assert mon.headroom("svc0") == pytest.approx(0.6)
+        assert mon.drift("svc0") == pytest.approx(0.2)   # 0.5*0.4
+        tr.record(20.0, "complete", "svc0", response=80.0)
+        assert mon.headroom("svc0") == pytest.approx(0.2)
+        assert mon.drift("svc0") == pytest.approx(0.5)   # 0.5*0.8 + 0.5*0.2
+        assert mon.tasks["svc0"].worst_response == 80.0
+        assert not mon.alerts
+
+    def test_bound_violation_alert(self):
+        seen = []
+        mon = BoundMonitor(on_alert=seen.append)
+        tr = _mk_trace(mon)
+        tr.record(0.0, "admit", "svc0", bound=50.0)
+        tr.record(5.0, "complete", "svc0", response=50.5)
+        assert [a.kind for a in mon.alerts] == ["bound_violation"]
+        assert seen == mon.alerts
+        assert mon.tasks["svc0"].violations == 1
+        assert mon.alerts[0].value == 50.5
+        assert mon.alerts[0].limit == 50.0
+
+    def test_deadline_miss_alert(self):
+        mon = BoundMonitor()
+        tr = _mk_trace(mon)
+        tr.record(7.0, "miss", "svc1", overshoot=1.25)
+        assert mon.alert_counts() == {"deadline_miss": 1}
+        assert mon.alerts[0].value == 1.25
+
+    def test_slack_erosion_latches_once_per_episode(self):
+        mon = BoundMonitor(ewma_alpha=1.0, erosion_threshold=0.1)
+        tr = _mk_trace(mon)
+        tr.record(0.0, "admit", "svc0", bound=100.0)
+        # three eroded jobs in a row: one alert, not three
+        for t in (1.0, 2.0, 3.0):
+            tr.record(t, "complete", "svc0", response=95.0)
+        assert mon.alert_counts() == {"slack_erosion": 1}
+        # recovery resets the latch; the next episode alerts again
+        tr.record(4.0, "complete", "svc0", response=10.0)
+        tr.record(5.0, "complete", "svc0", response=95.0)
+        assert mon.alert_counts() == {"slack_erosion": 2}
+
+    def test_preemptions_counted_by_resource(self):
+        mon = BoundMonitor()
+        tr = _mk_trace(mon)
+        tr.record(1.0, "preempt", "svc0", resource="gpu", by="svc1")
+        tr.record(2.0, "preempt", "svc0", by="svc1")
+        assert mon.tasks["svc0"].gpu_preemptions == 1
+        assert mon.tasks["svc0"].cpu_preemptions == 1
+
+    def test_update_and_migrate_refresh_bound(self):
+        mon = BoundMonitor()
+        tr = _mk_trace(mon)
+        tr.record(0.0, "admit", "svc0", bound=50.0)
+        tr.record(10.0, "update", "svc0", bound=80.0)
+        assert mon.tasks["svc0"].bound == 80.0
+        tr.record(20.0, "migrate", "svc0", bound=65.0)
+        assert mon.tasks["svc0"].bound == 65.0
+        assert mon.updates == 1 and mon.migrations == 1
+
+    def test_feed_accepts_recorded_trace_and_summary_rolls_up(self):
+        tr = EventTrace()
+        tr.record(0.0, "admit", "a", bound=10.0)
+        tr.record(0.0, "admit", "b", bound=20.0)
+        tr.record(1.0, "complete", "a", response=5.0)
+        tr.record(2.0, "reject", "c")
+        mon = BoundMonitor().feed(tr)
+        s = mon.summary()
+        assert s["totals"]["tasks"] == 2
+        assert s["totals"]["jobs"] == 1
+        assert s["totals"]["admits"] == 2
+        assert s["totals"]["rejects"] == 1
+        assert s["tasks"]["a"]["headroom"] == pytest.approx(0.5)
+        assert "_eroding" not in s["tasks"]["a"]
+
+    def test_monitor_exports_metric_gauges_when_enabled(self):
+        reg = metrics.enable(fresh=True)
+        mon = BoundMonitor()
+        tr = _mk_trace(mon)
+        tr.record(0.0, "admit", "svc0", bound=100.0)
+        tr.record(5.0, "complete", "svc0", response=25.0)
+        assert reg.value("monitor_headroom", task="svc0") \
+            == pytest.approx(0.75)
+        assert reg.value("monitor_drift", task="svc0") > 0.0
+
+    def test_readmit_callback_drives_certified_update(self):
+        calls = []
+
+        class StubTask:
+            period = 100.0
+            deadline = 90.0
+
+        class StubController:
+            def task(self, name):
+                return StubTask() if name == "svc0" else None
+
+            def update_rate(self, name, period, deadline, t):
+                calls.append((name, period, deadline, t))
+                return "decision"
+
+        cb = make_readmit_callback(StubController(), stretch=1.5)
+        out = cb(Alert(t=42.0, task="svc0", kind="slack_erosion",
+                       value=0.95, limit=0.9))
+        assert out == "decision"
+        assert calls == [("svc0", 150.0, 135.0, 42.0)]
+        # non-selected kinds and unknown tasks are ignored
+        assert cb(Alert(t=1.0, task="svc0", kind="deadline_miss",
+                        value=0.0, limit=0.0)) is None
+        assert cb(Alert(t=1.0, task="ghost", kind="slack_erosion",
+                        value=0.95, limit=0.9)) is None
+
+    def test_stretch_must_shed_load(self):
+        with pytest.raises(ValueError, match="stretch"):
+            make_readmit_callback(object(), stretch=1.0)
+
+
+def test_no_false_alarms_property():
+    """Observed R ≤ certified R̂ for every job ⇒ zero bound_violation
+    alerts, for arbitrary interleavings of admits/updates/completions."""
+    hypothesis = pytest.importorskip(
+        "hypothesis", reason="property tests need hypothesis"
+    )
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    job = st.tuples(
+        st.floats(min_value=1.0, max_value=1e3),     # certified bound
+        st.floats(min_value=0.0, max_value=1.0),     # response as ratio of it
+    )
+
+    @settings(max_examples=200, deadline=None)
+    @given(st.lists(st.tuples(st.sampled_from(["admit", "update"]), job),
+                    min_size=1, max_size=40))
+    def prop(steps):
+        mon = BoundMonitor()
+        tr = _mk_trace(mon)
+        for i, (kind, (bound, ratio)) in enumerate(steps):
+            t = float(i)
+            tr.record(t, kind, "svc", bound=bound)
+            tr.record(t + 0.5, "complete", "svc", response=bound * ratio)
+        assert not any(a.kind == "bound_violation" for a in mon.alerts), \
+            mon.alerts
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# byte-identity with observability on
+# ---------------------------------------------------------------------------
+
+
+class TestTraceIdentity:
+    def test_monitor_and_metrics_do_not_alter_the_trace(self):
+        """The same churn sim with (a) nothing, (b) metrics enabled and a
+        live monitor attached must dump byte-identical traces."""
+        p = golden_scenario("churn_heavy")
+        events = generate_churn_trace(seed=p.seed, horizon=2000.0,
+                                      config=p.churn)
+        plain = EventTrace()
+        simulate_churn(events, p.gn_total, 2500.0, seed=p.seed, trace=plain)
+
+        metrics.enable(fresh=True)
+        mon = BoundMonitor()
+        observed = EventTrace()
+        simulate_churn(events, p.gn_total, 2500.0, seed=p.seed,
+                       trace=observed, monitor=mon)
+        metrics.disable()
+
+        assert plain.dumps() == observed.dumps()
+        assert mon.summary()["totals"]["jobs"] > 0
+
+    def test_attach_returns_monitor_and_never_mutates_events(self):
+        tr = EventTrace()
+        tr.record(0.0, "admit", "svc0", bound=10.0)
+        before = tr.dumps()
+        mon = BoundMonitor()
+        assert mon.attach(tr) is mon
+        tr.record(1.0, "complete", "svc0", response=5.0)
+        after = EventTrace.loads(tr.dumps())
+        assert after.events[0].meta == tr.events[0].meta
+        assert before == EventTrace(
+        ).loads(before).dumps()  # canonical round-trip sanity
+
+
+# ---------------------------------------------------------------------------
+# control-plane spans
+# ---------------------------------------------------------------------------
+
+
+class TestSpans:
+    def test_spans_off_by_default(self):
+        tr = EventTrace()
+        assert tr.span(0.0, "certify", 1.5) is None
+        assert tr.counter(0.0, "headroom/svc0", headroom=0.5) is None
+        assert len(tr) == 0
+
+    def test_span_and_counter_chrome_rows(self):
+        tr = EventTrace(spans=True)
+        tr.span(10.0, "certify", 2.25, target="svc0")
+        tr.counter(11.0, "headroom/svc0", headroom=0.375)
+        chrome = tr.to_chrome()["traceEvents"]
+        span_rows = [r for r in chrome if r.get("ph") == "X"]
+        ctr_rows = [r for r in chrome if r.get("ph") == "C"]
+        assert len(span_rows) == 1 and len(ctr_rows) == 1
+        assert span_rows[0]["name"] == "certify"
+        assert span_rows[0]["cat"] == "control"
+        assert span_rows[0]["dur"] == pytest.approx(2250.0)  # ms → us
+        assert ctr_rows[0]["args"] == {"headroom": 0.375}
+
+    def test_controller_emits_control_plane_spans(self):
+        p = golden_scenario("churn_heavy")
+        events = generate_churn_trace(seed=p.seed, horizon=1500.0,
+                                      config=p.churn)
+        tr = EventTrace(spans=True)
+        ctl = DynamicController(p.gn_total, transition="instant", trace=tr)
+        for ev in events:
+            if ev.kind == "release":
+                ctl.release(ev.name)
+            else:
+                ctl.admit(ev.task, t=ev.time)
+        names = {ev.task for ev in tr.events if ev.kind == "span"}
+        assert "pinned_sweep" in names
+        assert names <= set(SPAN_NAMES)
+
+    def test_span_events_round_trip_and_goldens_have_none(self):
+        for path in sorted(GOLDEN_DIR.glob("*.json")):
+            doc = json.loads(path.read_text())
+            kinds = {e["kind"] for e in doc["trace"]["events"]}
+            assert "span" not in kinds and "ctr" not in kinds, (
+                f"{path.name} contains opt-in span/ctr events — goldens "
+                f"must stay byte-identical to the spans-off format"
+            )
+
+
+# ---------------------------------------------------------------------------
+# instrumentation integration + report CLI
+# ---------------------------------------------------------------------------
+
+
+class TestIntegration:
+    def test_churn_sim_populates_stack_metrics(self):
+        p = golden_scenario("churn_heavy")
+        events = generate_churn_trace(seed=p.seed, horizon=2000.0,
+                                      config=p.churn)
+        reg = metrics.enable(fresh=True)
+        simulate_churn(events, p.gn_total, 2500.0, seed=p.seed)
+        snap = reg.snapshot()
+        metrics.disable()
+        for family in (
+            "sched_admit_total",          # controller
+            "sched_admit_latency_ms",
+            "certify_analyses_total",     # certification engine
+            "engine_jobs_completed_total",  # discrete-event engine
+            "engine_response",
+        ):
+            assert family in snap, f"missing {family}"
+        admits = sum(
+            v for key, v in (
+                (k, s) for k, s in snap["sched_admit_total"]["series"].items()
+            )
+        )
+        assert admits > 0
+
+    def test_simulate_churn_monitor_gauges_every_resident(self):
+        p = golden_scenario("preemptive_churn")
+        events = generate_churn_trace(seed=p.seed, horizon=2500.0,
+                                      config=p.churn)
+        mon = BoundMonitor()
+        res = simulate_churn(events, p.gn_total, 3000.0, seed=p.seed,
+                             preemption="priority",
+                             gpu_ctx_overhead=p.gpu_ctx_overhead,
+                             monitor=mon)
+        gauges = mon.gauges()
+        missing = sorted(set(res.admitted) - set(gauges))
+        assert not missing, f"no gauge for residents: {missing}"
+        assert not any(a.kind == "bound_violation" for a in mon.alerts)
+        assert not res.bound_violations()
+
+    def test_report_cli_over_golden_doc(self, capsys):
+        from repro.obs import report
+
+        path = GOLDEN_DIR / "preemptive_churn.json"
+        rc = report.main([str(path)])
+        assert rc == 0
+        out = capsys.readouterr().out
+        assert "R^" in out or "R̂" in out
+        assert "svc" in out
+        doc = json.loads(path.read_text())
+        n_tasks = len({e["task"] for e in doc["trace"]["events"]
+                       if e["kind"] == "admit"})
+        # one table row per admitted task
+        assert sum(1 for ln in out.splitlines()
+                   if ln.lstrip().startswith("svc")) >= n_tasks
+
+    def test_report_cli_json_mode(self, capsys):
+        from repro.obs import report
+
+        path = GOLDEN_DIR / "churn_heavy.json"
+        rc = report.main([str(path), "--json"])
+        assert rc == 0
+        doc = json.loads(capsys.readouterr().out)
+        assert doc["monitor"]["totals"]["jobs"] > 0
+        assert doc["monitor"]["tasks"]
