@@ -12,8 +12,10 @@ long-lived services, few slices):
   admission  the same arrival stream offered to a dedicated-slice and a
              preemptive controller: accepted counts, the admission-rate
              gain (asserted > 1x), and mean per-admission certification
-             latency for both (the analysis-overhead ratio of the extra
-             preemptive fixed points).
+             latency for both — the all-calls analysis-overhead ratio
+             plus a gated mean-admit-latency ratio (asserted <=
+             ``_ADMIT_LATENCY_GATE``) that pins the vectorized
+             probe-first sweep at its achieved speed.
 
   sim        the same stream through ``simulate_churn`` under both
              models end to end: >= 1 service admitted preemptively that
@@ -50,6 +52,13 @@ GPU_CTX = _PRESET.gpu_ctx_overhead
 SEED = _PRESET.seed
 CHURN_CFG = _PRESET.churn
 
+#: certification-latency gate: mean preemptive *admit* latency may cost at
+#: most this multiple of the dedicated path's.  Measured ~14x after the
+#: vectorized probe-first sweep (from ~500x scalar); 30x leaves jitter
+#: headroom while still catching any fall-back to per-candidate scalar
+#: certification (which measures in the hundreds).
+_ADMIT_LATENCY_GATE = 30.0
+
 
 def _events(seed: int = SEED, horizon: float = 4000.0):
     return generate_churn_trace(seed=seed, horizon=horizon, config=CHURN_CFG)
@@ -57,7 +66,7 @@ def _events(seed: int = SEED, horizon: float = 4000.0):
 
 def _drive(ctl: DynamicController, seed: int) -> dict:
     """Offer the stream to one controller, timing each admission test."""
-    total = worst = 0.0
+    total = worst = admit_total = 0.0
     n = accepted = 0
     residents_peak = 0
     for ev in _events(seed=seed):
@@ -70,7 +79,9 @@ def _drive(ctl: DynamicController, seed: int) -> dict:
         total += dt
         worst = max(worst, dt)
         n += 1
-        accepted += int(dec.admitted)
+        if dec.admitted:
+            accepted += 1
+            admit_total += dt
         residents_peak = max(residents_peak, len(ctl.allocation))
     return {
         "admissions": n,
@@ -78,6 +89,8 @@ def _drive(ctl: DynamicController, seed: int) -> dict:
         "residents_peak": residents_peak,
         "total_ms": round(total * 1e3, 3),
         "mean_ms": round(total / n * 1e3, 3),
+        "admit_mean_ms": round(admit_total / accepted * 1e3, 3)
+        if accepted else None,
         "worst_ms": round(worst * 1e3, 3),
     }
 
@@ -128,6 +141,9 @@ def bench_admission(seed: int = SEED) -> dict:
         "analysis_latency_overhead": round(
             pre["mean_ms"] / ded["mean_ms"], 3
         ) if ded["mean_ms"] else None,
+        "admit_latency_ratio": round(
+            pre["admit_mean_ms"] / ded["admit_mean_ms"], 3
+        ) if ded["admit_mean_ms"] and pre["admit_mean_ms"] else None,
         "stages": {
             "dedicated": ded_stages,
             "preemptive": pre_stages,
@@ -207,11 +223,29 @@ def run(rows: list | None = None, out: str = "BENCH_preempt.json") -> dict:
             f"no admission-rate gain: {admission['admission_rate_gain']}"
         )
 
+    # Latency-ratio gate on *admitted* arrivals (rejections are excluded
+    # from both sides: a dedicated reject is an O(1) capacity check while
+    # a preemptive reject must certify interference, so the all-calls
+    # ratio measures the rejection mix, not certification speed — it is
+    # still reported as analysis_latency_overhead).  The batched probe-
+    # first sweep + memo warming brought the admit-path ratio from ~500x
+    # down to ~14x; the residual gap is the per-kernel preemptive fixed
+    # points that the dedicated closed form never pays.  The bound below
+    # is the honest achieved level with headroom for machine jitter — a
+    # regression past it means the vectorized path stopped being used.
+    ratio = admission["admit_latency_ratio"]
+    assert ratio is not None and ratio <= _ADMIT_LATENCY_GATE, (
+        f"preemptive admit latency regressed: {ratio}x mean overhead vs "
+        f"dedicated (gate {_ADMIT_LATENCY_GATE}x)"
+    )
+
     write_bench(out, result)
     rows.append(("preemption,admission_rate_gain",
                  admission["admission_rate_gain"]))
     rows.append(("preemption,analysis_latency_overhead",
                  admission["analysis_latency_overhead"]))
+    rows.append(("preemption,admit_latency_ratio",
+                 admission["admit_latency_ratio"]))
     rows.append(("preemption,accepted_dedicated",
                  admission["dedicated"]["accepted"]))
     rows.append(("preemption,accepted_preemptive",
@@ -236,6 +270,9 @@ def main() -> int:
     print(f"analysis latency: {a['dedicated']['mean_ms']} ms -> "
           f"{a['preemptive']['mean_ms']} ms per admission "
           f"({a['analysis_latency_overhead']}x overhead)")
+    print(f"admit latency: {a['dedicated']['admit_mean_ms']} ms -> "
+          f"{a['preemptive']['admit_mean_ms']} ms per admitted arrival "
+          f"({a['admit_latency_ratio']}x, gate {_ADMIT_LATENCY_GATE}x)")
     for stage, ratio in a["stages"]["overhead_by_stage"].items():
         ded_ms = a["stages"]["dedicated"][stage]["total_ms"]
         pre_ms = a["stages"]["preemptive"][stage]["total_ms"]

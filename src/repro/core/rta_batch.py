@@ -182,6 +182,31 @@ class _PartStack:
         return out
 
 
+def _build_stack(pairs: list[tuple]) -> _PartStack:
+    """Stack a ``(ViewTables, StaircaseArrays)`` pair list row-wise."""
+    pmax = max(arr.cum_ls.shape[1] for _vt, arr in pairs)
+    starts, rows = [], 0
+    for _vt, arr in pairs:
+        starts.append(rows)
+        rows += arr.cum_ls.shape[0]
+    cum_ls = np.full((rows, pmax), _INF)
+    cum_l = np.zeros((rows, pmax))
+    length = np.zeros((rows, pmax))
+    for (start, (_vt, arr)) in zip(starts, pairs):
+        k, p = arr.cum_ls.shape
+        cum_ls[start:start + k, :p] = arr.cum_ls
+        cum_l[start:start + k, :p] = arr.cum_l
+        length[start:start + k, :p] = arr.length
+    return _PartStack(
+        cum_ls=cum_ls,
+        cum_l=cum_l,
+        length=length,
+        pair_starts=np.asarray(starts, dtype=np.int64),
+        minh=np.array([arr.min_horizon for _vt, arr in pairs]),
+        refs=pairs,
+    )
+
+
 class _NumpyEngine:
     """Lockstep batched fixed point; bit-identical to ``rta.fixed_point``.
 
@@ -199,10 +224,28 @@ class _NumpyEngine:
 
     # below this many active entries, scalar iteration beats NumPy dispatch
     _TAIL = 48
+    # the fused-rows path hands off much later: its per-iteration cost
+    # shrinks with the active set (few unique windows), while each scalar
+    # continuation pays a per-row walker build — only true crawlers win
+    _TAIL_ROWS = 8
     _STACK_CACHE_LIMIT = 256
 
     def __init__(self) -> None:
         self._stacks: dict[tuple, _PartStack] = {}
+
+    def _cache_stack(self, key: tuple, pairs: list[tuple]) -> _PartStack:
+        st = self._stacks.get(key)
+        if st is not None:
+            return st
+        st = _build_stack(pairs)
+        if len(self._stacks) >= self._STACK_CACHE_LIMIT:
+            # Engine-global cache: it also pins the referenced ViewTables /
+            # arrays of departed task sets, so evict the oldest half
+            # (insertion order) rather than growing until process exit.
+            for old in list(self._stacks)[: self._STACK_CACHE_LIMIT // 2]:
+                del self._stacks[old]
+        self._stacks[key] = st
+        return st
 
     def _part_stack(self, groups, horizon: float) -> Optional[_PartStack]:
         """Build (or fetch) the stacked arrays for one part's pair set."""
@@ -213,39 +256,18 @@ class _NumpyEngine:
                 pairs.append((vt, vt.as_arrays(horizon)))
         if not pairs:
             return None
-        key = tuple(id(arr) for _vt, arr in pairs)
-        st = self._stacks.get(key)
-        if st is not None:
-            return st
-        pmax = max(arr.cum_ls.shape[1] for _vt, arr in pairs)
-        starts, rows = [], 0
-        for _vt, arr in pairs:
-            starts.append(rows)
-            rows += arr.cum_ls.shape[0]
-        cum_ls = np.full((rows, pmax), _INF)
-        cum_l = np.zeros((rows, pmax))
-        length = np.zeros((rows, pmax))
-        for (start, (_vt, arr)) in zip(starts, pairs):
-            k, p = arr.cum_ls.shape
-            cum_ls[start:start + k, :p] = arr.cum_ls
-            cum_l[start:start + k, :p] = arr.cum_l
-            length[start:start + k, :p] = arr.length
-        st = _PartStack(
-            cum_ls=cum_ls,
-            cum_l=cum_l,
-            length=length,
-            pair_starts=np.asarray(starts, dtype=np.int64),
-            minh=np.array([arr.min_horizon for _vt, arr in pairs]),
-            refs=pairs,
+        return self._cache_stack(
+            tuple(id(arr) for _vt, arr in pairs), pairs
         )
-        if len(self._stacks) >= self._STACK_CACHE_LIMIT:
-            # Engine-global cache: it also pins the referenced ViewTables /
-            # arrays of departed task sets, so evict the oldest half
-            # (insertion order) rather than growing until process exit.
-            for old in list(self._stacks)[: self._STACK_CACHE_LIMIT // 2]:
-                del self._stacks[old]
-        self._stacks[key] = st
-        return st
+
+    def rows_stack(self, pairs: list[tuple]) -> Optional[_PartStack]:
+        """Build (or fetch) the stacked arrays for an explicit pair list
+        (the fused-rows entry point); shares the part-stack cache."""
+        if not pairs:
+            return None
+        return self._cache_stack(
+            ("rows",) + tuple(id(arr) for _vt, arr in pairs), pairs
+        )
 
     def fixed_point_batch(
         self,
@@ -404,6 +426,159 @@ class _NumpyEngine:
                 acc = acc + pacc
             nx = base_v + (acc + const)
             if nx > limit:
+                return _INF
+            if nx <= x + _EPS:
+                return nx
+            x = nx
+        return _INF
+
+    def fixed_point_rows(
+        self,
+        base: np.ndarray,           # (R,)
+        limit: np.ndarray,          # (R,) per-row limit (deadline)
+        const: np.ndarray,          # (R,) per-row additive constant
+        idx1: np.ndarray,           # (R, P1) part-1 pair indices, G = sentinel
+        idx2: Optional[np.ndarray],  # (R, P2) part-2 pair indices, or None
+        stack: Optional[_PartStack],
+        horizon: float = 0.0,
+    ) -> np.ndarray:
+        """Heterogeneous fixed points in lockstep: every row carries its own
+        base/limit/const and its own higher-priority pair set.
+
+        Rows index into ONE shared :class:`_PartStack`; the sentinel index
+        ``G`` (== number of pairs) selects an all-zeros workload row, so
+        ragged pair lists right-pad with ``G`` — adding ``0.0`` to a
+        non-negative partial sum is a bitwise no-op, preserving the scalar
+        association ``(0 + w_1 + ... + w_k)``.  Rows with ``idx2`` add a
+        second partial sum (the tightened R̂3 two-part interference):
+        ``acc = (0 + pacc1) + pacc2`` exactly as the scalar closure.
+        """
+        R = base.shape[0]
+        if R == 0:
+            return np.zeros(0)
+        metrics.inc("rta_rows_calls_total")
+        G = 0 if stack is None else len(stack.pair_starts)
+        res = np.full(R, _INF)
+        active = base <= limit
+        x = base.copy()
+        it = -1
+        for it in range(_MAX_ITERS):
+            ai = np.nonzero(active)[0]
+            if ai.size == 0:
+                break
+            if ai.size <= self._TAIL_ROWS:
+                metrics.inc("rta_batch_stragglers_total", amount=ai.size)
+                for r in ai.tolist():
+                    p1 = [stack.refs[p][0] for p in idx1[r] if p < G]
+                    p2 = None
+                    if idx2 is not None:
+                        p2 = [stack.refs[p][0] for p in idx2[r] if p < G]
+                    res[r] = self._scalar_tail_rows(
+                        base[r], x[r], limit[r], const[r], p1, p2,
+                        _MAX_ITERS - it, horizon,
+                    )
+                break
+            t = x[ai]
+            if stack is None:
+                w = inv = None
+            else:
+                tu, inv = np.unique(t, return_inverse=True)
+                # sentinel row G: zero workload for padded pair slots
+                w = np.vstack([stack.eval(tu), np.zeros((1, tu.size))])
+            pacc = np.zeros_like(t)
+            if w is not None:
+                # one fancy gather for the whole pair matrix, then a
+                # column-by-column left fold — the scalar association
+                # (0 + w_1 + ... + w_k) at a fraction of the dispatches
+                m1 = w[idx1[ai], inv[:, None]]
+                for j in range(m1.shape[1]):
+                    pacc = pacc + m1[:, j]
+            acc = np.zeros_like(t) + pacc
+            if idx2 is not None and w is not None:
+                pacc2 = np.zeros_like(t)
+                m2 = w[idx2[ai], inv[:, None]]
+                for j in range(m2.shape[1]):
+                    pacc2 = pacc2 + m2[:, j]
+                acc = acc + pacc2
+            nx = base[ai] + (acc + const[ai])
+            lim = limit[ai]
+            over = nx > lim
+            conv = ~over & (nx <= t + _EPS)
+            res[ai[conv]] = nx[conv]
+            cont = ~(over | conv)
+            x[ai[cont]] = nx[cont]
+            active[ai[over | conv]] = False
+        metrics.inc("rta_batch_iters_total", amount=it + 1)
+        return res
+
+    @staticmethod
+    def _scalar_tail_rows(
+        base_v: float,
+        x_v: float,
+        limit_v: float,
+        const_v: float,
+        vts1: list,
+        vts2: Optional[list],
+        iters_left: int,
+        horizon: float,
+    ) -> float:
+        """Scalar continuation for one fused row (see ``_scalar_tail``).
+
+        Same monotone-pointer walk and the same float associations as the
+        vector path: ``acc = (0 + pacc1) [+ pacc2]``, ``nx = base +
+        (acc + const)`` — bit-identical to having kept iterating in
+        lockstep, and to ``rta.fixed_point``.
+        """
+        def mk(vts):
+            ws = []
+            for vt in vts:
+                cls, cl, ln, minh = vt.as_lists(horizon)
+                if minh <= limit_v:
+                    # degenerate view (position cap) — generic slow path
+                    ws.append((None, None, None, vt))
+                else:
+                    ws.append((cls, cl, ln, [0] * len(cls)))
+            return ws
+
+        walkers = [mk(vts1)]
+        if vts2 is not None:
+            walkers.append(mk(vts2))
+        x = x_v
+        for _ in range(iters_left):
+            acc = 0.0
+            for ws in walkers:
+                pacc = 0.0
+                for cls, cl, ln, aux in ws:
+                    if cls is None:
+                        pacc += aux.max_workload(x)
+                        continue
+                    if x <= 0.0:
+                        continue
+                    best = 0.0
+                    for r in range(len(cls)):
+                        crow = cls[r]
+                        p = aux[r]
+                        while crow[p] <= x:
+                            p += 1
+                        aux[r] = p
+                        if p:
+                            consumed = crow[p - 1]
+                            work = cl[r][p - 1]
+                        else:
+                            consumed = 0.0
+                            work = 0.0
+                        partial = ln[r][p]
+                        gap = x - consumed
+                        if partial > gap:
+                            partial = gap
+                        if partial > 0.0:
+                            work += partial
+                        if work > best:
+                            best = work
+                    pacc += best
+                acc = acc + pacc
+            nx = base_v + (acc + const_v)
+            if nx > limit_v:
                 return _INF
             if nx <= x + _EPS:
                 return nx
@@ -589,6 +764,18 @@ class _JaxEngine:
             jnp.asarray(base_p), limit, cls, cl, ln, jnp.asarray(ids_p), const
         )
         return np.asarray(res)[:B]
+
+    def rows_stack(self, pairs):
+        return self._np_engine.rows_stack(pairs)
+
+    def fixed_point_rows(self, base, limit, const, idx1, idx2, stack,
+                         horizon=0.0):
+        # Heterogeneous per-row limits/consts don't fit the jitted lockstep
+        # kernel's static shapes; the NumPy fused-rows path is the exact
+        # reference either way.
+        return self._np_engine.fixed_point_rows(
+            base, limit, const, idx1, idx2, stack, horizon
+        )
 
 
 _ENGINES: dict[str, object] = {}
@@ -852,6 +1039,268 @@ class BatchAnalyzer:
         return self.analyze_depth(
             k, parents_full, g, np.arange(prefixes.shape[0])
         )
+
+    def analyze_pinned(
+        self,
+        a: int,
+        alloc_interf: Sequence[int],
+        alloc_self: Sequence[int],
+        gs: Sequence[int],
+        k_lo: Optional[int] = None,
+        k_hi: Optional[int] = None,
+    ) -> np.ndarray:
+        """R̂ for tasks ``k_lo..k_hi`` at every candidate GN of position a.
+
+        The pinned-sweep / coordinate-descent shape: candidates share every
+        allocation except position ``a``'s, which takes each value of
+        ``gs`` — as the task's own GN *and* as its interference on lower
+        priority.  Positions ``i != a`` contribute interference at
+        ``alloc_interf[i]`` and run at ``alloc_self[i]`` (the two differ
+        for residents mid-transition).  Tasks above ``a`` are untouched by
+        construction — callers reuse their memoized bounds instead.
+
+        ``k_lo``/``k_hi`` (inclusive, defaulting to ``a`` / ``n - 1``)
+        bound the analyzed tasks, so callers can probe just the pinned
+        task (a failing candidate is killed at one row's cost, matching
+        the scalar path's probe-first trick) or stop at the first task a
+        descent move could possibly fix.  Per-task results are unaffected
+        — each task's analysis is independent given the allocation.
+
+        Returns a ``(len(gs), k_hi - k_lo + 1)`` response matrix (``inf``
+        = unschedulable), bit-identical per entry to
+        ``RtgpuIncremental.analyze_task``: ALL per-segment fixed points
+        (bus, CPU, preemptive GPU) across every (task, candidate) go
+        through ONE fused-rows engine call, and all R̂2/R̂3 combinations
+        through a second — two array dispatches replace the
+        O(candidates × tasks) scalar analyses of the fallback path.
+        """
+        ts = self.taskset
+        n = len(ts)
+        gs_l = [int(g) for g in gs]
+        C = len(gs_l)
+        k_lo = a if k_lo is None else k_lo
+        k_hi = n - 1 if k_hi is None else k_hi
+        if not a <= k_lo <= n:
+            raise ValueError(f"k_lo {k_lo} outside [{a}, {n}]")
+        if C == 0 or a >= n or k_hi < k_lo:
+            return np.zeros((C, max(k_hi - k_lo + 1, 0)))
+        pre = self.preemption.enabled
+        horizon = self._horizon
+        inc = self._inc
+        pidx: dict[tuple, int] = {}
+        plist: list[tuple] = []
+        fetch = {"mem": inc.mem_tables, "cpu": inc.cpu_tables,
+                 "gpu": inc.gpu_tables}
+
+        def pair(kind: str, i: int, g: int) -> int:
+            key = (kind, i, g)
+            s = pidx.get(key)
+            if s is None:
+                vt = fetch[kind](i, g)
+                s = len(plist)
+                pidx[key] = s
+                plist.append((vt, vt.as_arrays(horizon)))
+            return s
+
+        apairs: dict[str, list[int]] = {}
+
+        def a_pairs(kind: str) -> list[int]:
+            got = apairs.get(kind)
+            if got is None:
+                got = [pair(kind, a, g) for g in gs_l]
+                apairs[kind] = got
+            return got
+
+        def kind_lists(kind: str, k: int) -> tuple[list[list[int]], bool]:
+            """Per-candidate higher-priority pair lists for ``(kind, k)``,
+            in priority order; shared when position a carries no view of
+            this kind below k."""
+            tmpl: list[int] = []
+            aslot = None
+            for i in range(k):
+                if kind == "mem" and not ts[i].n_mem:
+                    continue
+                if kind == "gpu" and not ts[i].n_gpu:
+                    continue
+                if i == a:
+                    aslot = len(tmpl)
+                    tmpl.append(-1)
+                else:
+                    tmpl.append(pair(kind, i, int(alloc_interf[i])))
+            if aslot is None:
+                return [tmpl] * C, True
+            ap = a_pairs(kind)
+            out = []
+            for c in range(C):
+                pl = list(tmpl)
+                pl[aslot] = ap[c]
+                out.append(pl)
+            return out, False
+
+        # ---- phase 1: every per-segment fixed point as one rows call ----
+        base1: list[float] = []
+        lim1: list[float] = []
+        con1: list[float] = []
+        pl1: list[list[int]] = []
+
+        def emit1(b: float, d: float, co: float, pl: list[int]) -> int:
+            base1.append(b)
+            lim1.append(d)
+            con1.append(co)
+            pl1.append(pl)
+            return len(base1) - 1
+
+        blocking = inc._blocking
+        g_blocking = inc._gpu_blocking
+        recs = []
+        for k in range(k_lo, k_hi + 1):
+            task = ts[k]
+            d = task.deadline
+            mem_pls, mem_shared = kind_lists("mem", k)
+            cpu_pls, cpu_shared = kind_lists("cpu", k)
+            m = len(task.cpu_hi)
+            rec: dict = {"task": task, "d": d, "k": k, "m": m,
+                         "mem_pls": mem_pls, "cpu_pls": cpu_pls}
+            if task.n_mem:
+                span = [0] if mem_shared else range(C)
+                rec["mem_rows"] = [
+                    [emit1(task.mem_hi[j], d, blocking[k], mem_pls[c])
+                     for j in range(task.n_mem)]
+                    for c in span
+                ]
+            if m:
+                span = [0] if cpu_shared else range(C)
+                rec["cpu_rows"] = [
+                    [emit1(task.cpu_hi[j], d, 0.0, cpu_pls[c])
+                     for j in range(m)]
+                    for c in span
+                ]
+            if pre and task.n_gpu:
+                gpu_pls, gpu_shared = kind_lists("gpu", k)
+                if gpu_shared and k != a:
+                    # hp set and own GN both candidate-independent
+                    hi = self._gpu(k, int(alloc_self[k]))[1]
+                    rec["gpu_rows"] = [
+                        [emit1(hi[j], d, g_blocking[k], gpu_pls[0])
+                         for j in range(task.n_gpu)]
+                    ]
+                else:
+                    rows = []
+                    for c in range(C):
+                        own = gs_l[c] if k == a else int(alloc_self[k])
+                        hi = self._gpu(k, own)[1]
+                        rows.append(
+                            [emit1(hi[j], d, g_blocking[k], gpu_pls[c])
+                             for j in range(task.n_gpu)]
+                        )
+                    rec["gpu_rows"] = rows
+            recs.append(rec)
+
+        # every pair of BOTH phases is registered by now (phase 2 reuses
+        # the mem/cpu lists above), so one stack serves both calls
+        stack = self._engine.rows_stack(plist)
+        G = len(plist)
+
+        def to_idx(pls: list[list[int]]) -> np.ndarray:
+            width = max((len(p) for p in pls), default=0)
+            out = np.full((len(pls), max(width, 1)), G, dtype=np.int64)
+            for r, pl in enumerate(pls):
+                if pl:
+                    out[r, :len(pl)] = pl
+            return out
+
+        resp1 = self._engine.fixed_point_rows(
+            np.asarray(base1, dtype=np.float64),
+            np.asarray(lim1, dtype=np.float64),
+            np.asarray(con1, dtype=np.float64),
+            to_idx(pl1), None, stack, horizon,
+        )
+
+        def gathered(rows: Optional[list], cnt: int) -> np.ndarray:
+            if not cnt or rows is None:
+                return np.zeros((C, 0))
+            got = resp1[np.asarray(rows, dtype=np.int64)]
+            if got.shape[0] == 1 and C > 1:
+                got = np.broadcast_to(got, (C, cnt))
+            return got
+
+        # ---- phase 2: all R̂2 / tightened-R̂3 combinations ----
+        r1s: list[np.ndarray] = []
+        base2l: list[float] = []
+        lim2l: list[float] = []
+        pl2a: list[list[int]] = []
+        pl2b: list[list[int]] = []
+        r2_ids: list[list[int]] = []
+        r3_ids: list[list[int]] = []
+        for rec in recs:
+            task = rec["task"]
+            k = rec["k"]
+            d = rec["d"]
+            mem = gathered(rec.get("mem_rows"), task.n_mem)
+            cpu = gathered(rec.get("cpu_rows"), rec["m"])
+            mem_sum = _seq_sum(mem)
+            cpu_sum = _seq_sum(cpu)
+            if pre and task.n_gpu:
+                gpu_sum = _seq_sum(gathered(rec["gpu_rows"], task.n_gpu))
+            elif task.n_gpu:
+                if k == a:
+                    gpu_sum = np.array(
+                        [self._gpu(k, g)[2] for g in gs_l], dtype=np.float64
+                    )
+                else:
+                    gpu_sum = np.full(
+                        C, self._gpu(k, int(alloc_self[k]))[2]
+                    )
+            else:
+                gpu_sum = np.zeros(C)
+            mem_bad = (np.isinf(mem).any(axis=1) if task.n_mem
+                       else np.zeros(C, dtype=bool))
+            cpu_bad = (np.isinf(cpu).any(axis=1) if rec["m"]
+                       else np.zeros(C, dtype=bool))
+            r1 = (gpu_sum + mem_sum) + cpu_sum
+            r1[mem_bad | cpu_bad] = _INF
+            r1s.append(r1)
+
+            ctot = task.cpu_total_hi()
+            base2 = (gpu_sum + mem_sum) + ctot
+            base2[mem_bad] = _INF
+            ids2 = []
+            for c in range(C):
+                base2l.append(float(base2[c]))
+                lim2l.append(d)
+                pl2a.append(rec["cpu_pls"][c])
+                pl2b.append([])
+                ids2.append(len(base2l) - 1)
+            r2_ids.append(ids2)
+            if self.tightened:
+                base3 = ((gpu_sum + task.mem_total_hi()) + ctot) \
+                    + task.n_mem * blocking[k]
+                ids3 = []
+                for c in range(C):
+                    base2l.append(float(base3[c]))
+                    lim2l.append(d)
+                    pl2a.append(rec["mem_pls"][c])
+                    pl2b.append(rec["cpu_pls"][c])
+                    ids3.append(len(base2l) - 1)
+                r3_ids.append(ids3)
+
+        resp2 = self._engine.fixed_point_rows(
+            np.asarray(base2l, dtype=np.float64),
+            np.asarray(lim2l, dtype=np.float64),
+            np.zeros(len(base2l)),
+            to_idx(pl2a),
+            to_idx(pl2b) if self.tightened else None,
+            stack, horizon,
+        )
+
+        out = np.empty((C, k_hi - k_lo + 1))
+        for t_i in range(len(recs)):
+            r2 = resp2[np.asarray(r2_ids[t_i], dtype=np.int64)]
+            if self.tightened:
+                r3 = resp2[np.asarray(r3_ids[t_i], dtype=np.int64)]
+                r2 = np.minimum(r2, r3)
+            out[:, t_i] = np.minimum(r1s[t_i], r2)
+        return out
 
 
 # ---- frontier grid search ---------------------------------------------------

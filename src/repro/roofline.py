@@ -96,6 +96,16 @@ def _shape_bytes(type_str: str) -> int:
     return total
 
 
+def _shape_elems(type_str: str) -> int:
+    total = 0
+    for _dtype, dims in _shape_list(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
 @dataclasses.dataclass
 class _Op:
     name: str
@@ -181,22 +191,23 @@ def _weights(comps: dict[str, "_Computation"]) -> dict[str, float]:
 
 def _dot_flops(op: _Op, shapes: dict) -> float:
     """2 · |output| · |lhs contraction dims|."""
-    out_elems = 0
-    for dtype, dims in _shape_list(op.type_str):
-        n = 1
-        for d in dims:
-            n *= d
-        out_elems += n
-    args = re.findall(r"\(%?([\w.\-]+)[,)]", "(" + op.line.split("(", 1)[1])
+    out_elems = _shape_elems(op.type_str)
+    # lhs operand: current XLA prints the operand TYPE inline —
+    # ``dot(f32[256,512]{1,0} %lhs, ...)`` — so read the shape straight
+    # from the first argument text; older dumps print only ``dot(%lhs,``,
+    # in which case the shape is resolved through the symbol table.
     lhs_shape = None
-    margs = re.search(r"\bdot\(\s*%?([\w.\-]+)\s*,", op.line)
-    if margs:
-        lhs = margs.group(1)
-        lhs_type = shapes.get(lhs)
-        if lhs_type:
-            sl = _shape_list(lhs_type)
-            if sl:
-                lhs_shape = sl[0][1]
+    mt = re.search(r"\bdot\(\s*([a-z]\w*)\[([\d,]*)\]", op.line)
+    if mt:
+        lhs_shape = [int(d) for d in mt.group(2).split(",") if d]
+    else:
+        margs = re.search(r"\bdot\(\s*%?([\w.\-]+)\s*,", op.line)
+        if margs:
+            lhs_type = shapes.get(margs.group(1))
+            if lhs_type:
+                sl = _shape_list(lhs_type)
+                if sl:
+                    lhs_shape = sl[0][1]
     contract = 1
     mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
     if mc and lhs_shape is not None:
@@ -255,8 +266,9 @@ def analyze_hlo(hlo: str) -> HloStats:
             if op.opcode == "dot":
                 flops += weight * _dot_flops(op, comp.shapes)
             elif op.opcode == "convolution":
-                # rare here (no conv frontends); approximate via output*2
-                flops += weight * 2.0 * _shape_bytes(op.type_str)
+                # rare here (no conv frontends); approximate via 2·|output|
+                # ELEMENTS (bytes would inflate flops by the dtype width)
+                flops += weight * 2.0 * _shape_elems(op.type_str)
             if inside_fusion:
                 continue
             if op.opcode in _FREE_OPS:

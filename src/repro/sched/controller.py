@@ -162,6 +162,13 @@ class DynamicController:
         # (prefix (task, GN) pairs, own (task, GN), bus blocking from
         # below) — value = R̂ (inf when unschedulable).
         self._memo: dict[tuple, float] = {}
+        # Re-allocation backoff (preemptive arbitration): pool fingerprints
+        # whose coordinate-descent search already came up empty.  A failed
+        # search is a property of the saturated resident state, so repeat
+        # arrivals against the unchanged pool skip straight to rejection;
+        # any admit/release/re-size changes the fingerprint and re-arms
+        # the search.  Bounded FIFO — an evicted entry only costs a redo.
+        self._realloc_futile: dict[tuple, None] = {}
         self.epoch = 0
 
     # Pinned-sweep crossover: (candidate GNs x tasks analyzed) above which
@@ -369,28 +376,47 @@ class DynamicController:
         # boundary protocol a shrinking resident keeps max(old, new) slices
         # until its job boundary, so re-allocating can never hand an arrival
         # capacity the pinned path didn't already have.  Under priority
-        # preemption it is skipped entirely: the pinned sweep already ranges
-        # over the whole pool (no disjointness constraint to re-balance
-        # around), and the grid search's sum-budget enumeration models
-        # dedicated capacity, not time-shared slices.
+        # preemption the sum-budget grid search models dedicated capacity,
+        # not time-shared slices, so the fallback runs only for engines
+        # whose realloc_search understands overlapping holdings (the
+        # preemptive certifier's per-task coordinate descent): re-sizing a
+        # resident's slice count reshapes its occupancy interference, which
+        # CAN unblock an arrival the pinned sweep rejects.
         realloc_ok = (self.allow_realloc if allow_realloc is None
                       else self.allow_realloc and allow_realloc)
         realloc_ran = False
+        realloc_backoff = False
         if realloc_ok and self.transition == "instant" \
-                and not self.preemption.enabled:
-            t0 = time.perf_counter() if spans else 0.0
-            dec, dfs_tried = self._admit_realloc(
-                task, pool, fork, memo, t, tried
-            )
-            if spans:
-                self.trace.span(
-                    t, "grid_search", (time.perf_counter() - t0) * 1e3,
-                    target=name, tried=dfs_tried, hit=dec is not None,
+                and (not self.preemption.enabled
+                     or self._certifier.supports_preemptive_realloc):
+            # Backoff: a failed preemptive descent certifies the *resident*
+            # state as saturated, so repeat arrivals against the unchanged
+            # pool skip the search.  Conservative only — it can reject an
+            # arrival a fresh search would admit, never the reverse.
+            fp = (self._pool.fingerprint()
+                  if self.preemption.enabled else None)
+            if fp is not None and fp in self._realloc_futile:
+                metrics.inc("sched_realloc_skips_total")
+                realloc_backoff = True
+            else:
+                t0 = time.perf_counter() if spans else 0.0
+                dec, dfs_tried = self._admit_realloc(
+                    task, pool, fork, memo, t, tried
                 )
-            if dec is not None:
-                return dec
-            tried += dfs_tried
-            realloc_ran = True
+                if spans:
+                    self.trace.span(
+                        t, "grid_search", (time.perf_counter() - t0) * 1e3,
+                        target=name, tried=dfs_tried, hit=dec is not None,
+                    )
+                if dec is not None:
+                    return dec
+                if fp is not None:
+                    self._realloc_futile[fp] = None
+                    while len(self._realloc_futile) > 16:
+                        self._realloc_futile.pop(
+                            next(iter(self._realloc_futile)))
+                tried += dfs_tried
+                realloc_ran = True
 
         if realloc_ran:
             reason = (
@@ -398,6 +424,9 @@ class DynamicController:
                 + (" (search truncated)" if tried >= self.max_candidates
                    else "")
             )
+        elif realloc_backoff:
+            reason = ("unschedulable under pinned allocations; re-balance "
+                      "skipped (resident set already certified saturated)")
         elif g_min is None:
             reason = "no feasible GN within free capacity"
         else:
@@ -445,6 +474,9 @@ class DynamicController:
             e.staged_alloc = None
         cand_entry.alloc = new_gn[task.name]
         bounds = {ta.name: ta.response for ta in fed.analysis.tasks}
+        # re-balanced bounds into the certify memo: the next sweep's
+        # higher-priority prefix is lookups, not a full re-analysis
+        self._certifier.warm_memo(ordered, fed.analysis, fork, memo)
         return self._commit_admit(
             cand_entry, bounds, pool, fork, memo, t, path="realloc",
             tried=tried0 + fed.candidates_tried,

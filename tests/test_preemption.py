@@ -132,6 +132,39 @@ class TestPreemptiveAnalysis:
                     assert sa.r1 == ba.r1 and sa.r2 == ba.r2, (alloc, k)
                     assert sa.gpu_resp_hi == ba.gpu_resp_hi, (alloc, k)
 
+    def test_fused_pinned_rows_bit_identical(self):
+        """The fused pinned-sweep matrix (``analyze_pinned``: every task at
+        or below the pinned position × every candidate GN in two engine
+        calls) reproduces the scalar oracle's R̂ bit-for-bit — including
+        mid-transition shapes where interference and own-GN vectors
+        differ."""
+        ts = generate_taskset(
+            np.random.default_rng(11), 0.6,
+            GeneratorConfig(n_tasks=5, n_subtasks=4, variability=0.2),
+        )
+        gs = [1, 2, 3, 4]
+        for pm in (PreemptionModel("priority", 0.05), PreemptionModel()):
+            for tight in (False, True):
+                ana = BatchAnalyzer(ts, tightened=tight, preemption=pm)
+                rng = np.random.default_rng(7)
+                for _ in range(10):
+                    interf = [int(g) for g in rng.integers(1, 5, len(ts))]
+                    own = [int(g) for g in rng.integers(1, 5, len(ts))]
+                    a = int(rng.integers(0, len(ts)))
+                    out = ana.analyze_pinned(a, interf, own, gs)
+                    for c, g in enumerate(gs):
+                        iv = list(interf)
+                        sv = list(own)
+                        iv[a] = sv[a] = g
+                        for k in range(a, len(ts)):
+                            ref = ana.scalar.analyze_task(
+                                k, iv[:k] + [sv[k]]
+                            ).response
+                            got = out[c, k - a]
+                            assert got == ref or (
+                                math.isinf(got) and math.isinf(ref)
+                            ), (pm.mode, tight, a, g, k)
+
 
 # ---- certification layer ----------------------------------------------------
 
@@ -230,13 +263,65 @@ class TestPreemptiveCertification:
         assert ctl.preemption == PreemptionModel("priority", 0.05)
         assert ctl._certifier.preemption == ctl.preemption
 
-    def test_instant_mode_skips_realloc_under_preemption(self):
+    def test_instant_mode_realloc_unblocks_arrivals(self):
+        """Preemptive re-allocation (per-task coordinate descent over
+        overlapping slices) admits arrivals the pinned sweep rejects, by
+        re-sizing residents' GNs — and never admits less than the
+        pinned-only controller."""
         tasks = self._tasks(4, n=12)
-        ctl = DynamicController(2, transition="instant",
+        kw = dict(transition="instant", preemption="priority",
+                  gpu_ctx_overhead=0.05)
+        ctl = DynamicController(2, **kw)
+        ctl_no = DynamicController(2, allow_realloc=False, **kw)
+        paths = []
+        for t in tasks:
+            dec = ctl.admit(t)
+            paths.append(dec.path)
+            if dec.admitted:
+                assert set(dec.bounds) == set(ctl.allocation)
+                assert all(math.isfinite(b) for b in dec.bounds.values())
+            ctl_no.admit(t)
+        assert "realloc" in paths
+        assert set(ctl_no.allocation) < set(ctl.allocation)
+        assert all(1 <= g <= ctl.gn_total for g in ctl.allocation.values())
+
+    def test_scalar_engine_still_skips_realloc_under_preemption(self):
+        """The scalar DFS enumerates a dedicated sum budget, which doesn't
+        model time-shared slices — under preemption that engine must keep
+        skipping the re-allocation fallback."""
+        tasks = self._tasks(4, n=12)
+        ctl = DynamicController(2, engine="scalar", transition="instant",
                                 preemption="priority", gpu_ctx_overhead=0.05)
+        assert not ctl._certifier.supports_preemptive_realloc
         for t in tasks:
             dec = ctl.admit(t)
             assert dec.path in ("pinned", "")   # never "realloc"
+
+    def test_batch_sweep_warms_shared_certify_memo(self):
+        """Bounds certified by the batched sweeps land in the shared memo
+        under the scalar loop's keys: re-certifying the freshly admitted
+        set costs zero new analyses (and zero memo misses)."""
+        from repro.obs import metrics
+
+        for engine, preemption in (("batch", "priority"), ("batch", None)):
+            ctl = DynamicController(
+                4, engine=engine, preemption=preemption,
+                gpu_ctx_overhead=0.05,
+            )
+            ctl._certifier.min_work = 1   # force the batched path
+            admitted = [t for t in self._tasks(3, n=8)
+                        if ctl.admit(t).admitted]
+            assert len(admitted) >= 2
+            reg = metrics.registry()
+            misses0 = reg.value("certify_memo_misses_total") or 0.0
+            bounds, analyses, reason = ctl._certifier.certify(
+                ctl._pool.entries(), ctl._tables.fork(), dict(ctl._memo)
+            )
+            assert reason == "" and bounds is not None
+            assert analyses == 0
+            misses1 = reg.value("certify_memo_misses_total") or 0.0
+            assert misses1 == misses0
+            assert bounds == ctl.bounds()
 
 
 # ---- engine seam ------------------------------------------------------------

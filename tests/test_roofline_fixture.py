@@ -1,0 +1,85 @@
+"""HLO-text fixture tests for the static roofline analyzer.
+
+Pins ``analyze_hlo`` against a checked-in scan-over-layers dump
+(``tests/fixtures/scan_layers_train.hlo``, captured in the current XLA
+textual idiom: inline operand types, ``known_trip_count`` backend configs)
+so parser drift is caught without compiling a model.
+"""
+import pathlib
+
+import pytest
+
+from repro.roofline import analyze_hlo
+
+FIXTURE = pathlib.Path(__file__).parent / "fixtures" / "scan_layers_train.hlo"
+
+# Hand-computed expectations for the fixture:
+#   body dot   : 2 * |f32[8,16]| * 16  = 4096  x trip_count 3 = 12288
+#   fused dot  : 2 * |f32[8,4]|  * 16  = 1024  x weight 1
+#   convolution: 2 * |f32[1,8,4]|      =   64  (elements, not bytes)
+EXPECTED_FLOPS = 12288.0 + 1024.0 + 64.0
+#   add.clone 12 + body (4108 + 2048 + 12) x 3 + cond 9 x 4 + entry 1412
+EXPECTED_BYTES = 12.0 + 6168.0 * 3 + 36.0 + 1412.0
+EXPECTED_COLL = 128.0  # one all-reduce of f32[8,4]
+
+
+@pytest.fixture(scope="module")
+def hlo_text():
+    return FIXTURE.read_text()
+
+
+class TestScanLayersFixture:
+    def test_pinned_flops(self, hlo_text):
+        stats = analyze_hlo(hlo_text)
+        assert stats.flops == EXPECTED_FLOPS
+
+    def test_pinned_bytes(self, hlo_text):
+        stats = analyze_hlo(hlo_text)
+        assert stats.bytes_accessed == EXPECTED_BYTES
+
+    def test_pinned_collectives(self, hlo_text):
+        stats = analyze_hlo(hlo_text)
+        assert stats.collective_bytes == EXPECTED_COLL
+        assert stats.collective_counts == {"all-reduce": EXPECTED_COLL}
+
+    def test_trip_count_scales_loop_body(self, hlo_text):
+        """Doubling the annotated trip count doubles only the body term."""
+        scaled = hlo_text.replace('"known_trip_count":{"n":"3"}',
+                                  '"known_trip_count":{"n":"6"}')
+        assert scaled != hlo_text
+        stats = analyze_hlo(scaled)
+        assert stats.flops == 4096.0 * 6 + 1024.0 + 64.0
+
+    def test_conv_counts_elements_not_bytes(self, hlo_text):
+        """f32 output: bytes would be 4x elements; pin the element count."""
+        stats = analyze_hlo(hlo_text)
+        no_conv = hlo_text.replace(
+            "%convolution.1 = f32[1,8,4]{2,1,0} convolution",
+            "%convolution.1 = f32[1,8,4]{2,1,0} bitcast")
+        delta = stats.flops - analyze_hlo(no_conv).flops
+        assert delta == 64.0  # 2 * 32 elements, not 2 * 128 bytes
+
+
+class TestDotShapeResolution:
+    def test_bare_operand_names_resolve_through_symbol_table(self):
+        """Older dumps print ``dot(%lhs, %rhs)`` with no inline types."""
+        hlo = """\
+ENTRY %main.9 (a.1: f32[4,8], b.1: f32[8,2]) -> f32[4,2] {
+  %a.1 = f32[4,8]{1,0} parameter(0)
+  %b.1 = f32[8,2]{1,0} parameter(1)
+  ROOT %dot.9 = f32[4,2]{1,0} dot(%a.1, %b.1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+        stats = analyze_hlo(hlo)
+        assert stats.flops == 2.0 * 8 * 8  # 2 * |f32[4,2]| * k=8
+
+    def test_inline_operand_types_win(self):
+        hlo = """\
+ENTRY %main.9 (a.1: f32[4,8], b.1: f32[8,2]) -> f32[4,2] {
+  %a.1 = f32[4,8]{1,0} parameter(0)
+  %b.1 = f32[8,2]{1,0} parameter(1)
+  ROOT %dot.9 = f32[4,2]{1,0} dot(f32[4,8]{1,0} %a.1, f32[8,2]{1,0} %b.1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+        stats = analyze_hlo(hlo)
+        assert stats.flops == 2.0 * 8 * 8
