@@ -8,6 +8,7 @@ perf-trajectory tooling can key on one schema.
 from __future__ import annotations
 
 import json
+import os
 import time
 
 #: bump when the shared envelope layout changes (not when one benchmark's
@@ -27,7 +28,21 @@ def envelope(bench: str, config: dict, **sections) -> dict:
 
 
 def write_bench(path: str, doc: dict) -> str:
-    with open(path, "w") as fh:
-        json.dump(doc, fh, indent=2)
-        fh.write("\n")
+    """Atomically write one BENCH_*.json artifact.
+
+    tmp file + fsync + ``os.replace``: a crash mid-write leaves either the
+    previous artifact or the new one, never a truncated JSON that would
+    poison the perf trajectory."""
+    path = str(path)
+    tmp = f"{path}.tmp.{os.getpid()}"
+    try:
+        with open(tmp, "w") as fh:
+            json.dump(doc, fh, indent=2)
+            fh.write("\n")
+            fh.flush()
+            os.fsync(fh.fileno())
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
     return path

@@ -1,0 +1,210 @@
+"""Durable control plane acceptance -> BENCH_recovery.json.
+
+Two measurements, one gate:
+
+  admit overhead   A/B of ``DynamicController.admit`` with and without a
+                   write-ahead journal attached (same taskset, fresh
+                   controller per side, best-of-repeats means).  The
+                   journaled mean must stay under ``MAX_OVERHEAD_X`` x
+                   the in-memory mean — the durability tax is one fsync'd
+                   sqlite append against a full certification pass, so
+                   2x is generous headroom, not a target.
+
+  recovery time    cold-start ``recover_controller`` (journal replay +
+                   re-certification of every journaled bound) against an
+                   ``--residents``-task pool built through the real
+                   admission path.  Reported, not gated: the number CI
+                   tracks is wall-clock to a certified-safe control plane
+                   after ``kill -9``.
+
+  PYTHONPATH=src python benchmarks/recovery_acceptance.py \
+      [--residents 100] [--out BENCH_recovery.json]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import gc
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import GeneratorConfig, generate_taskset
+from repro.obs import metrics
+from repro.sched import DynamicController, Journal, recover_controller
+
+try:
+    from benchmarks._envelope import envelope, write_bench
+except ImportError:                      # run as a script from benchmarks/
+    from _envelope import envelope, write_bench
+
+#: acceptance ceiling: journaled mean admit latency vs in-memory mean
+MAX_OVERHEAD_X = 2.0
+
+#: admit-overhead A/B workload — small enough that the certification pass
+#: does not drown the fsync being measured
+AB_GN_TOTAL = 32
+AB_ADMITS = 12
+AB_UTIL = 0.02
+AB_REPEATS = 3
+
+#: recovery workload defaults (CI-scale; the acceptance figure is 100)
+RECOVERY_GN_TOTAL = 128
+RECOVERY_UTIL = 0.004
+SEED = 7
+
+
+def _task(seed: int, util: float, name: str):
+    rng = np.random.default_rng(seed)
+    t = list(generate_taskset(
+        rng, util, GeneratorConfig(n_tasks=1, n_subtasks=2)
+    ))[0]
+    return dataclasses.replace(t, name=name)
+
+
+def _admit_pass(journal_path: str | None) -> float:
+    """Mean per-admit wall-clock (ms) for one fresh controller."""
+    journal = Journal(journal_path) if journal_path else None
+    ctl = DynamicController(AB_GN_TOTAL, transition="instant",
+                            journal=journal)
+    gc.collect()
+    gc.disable()
+    try:
+        t0 = time.perf_counter()
+        for i in range(AB_ADMITS):
+            dec = ctl.admit(_task(SEED + i, AB_UTIL, f"t{i}"))
+            assert dec.admitted, dec.reason
+        elapsed_ms = (time.perf_counter() - t0) * 1e3
+    finally:
+        gc.enable()
+        if journal is not None:
+            journal.close()
+    return elapsed_ms / AB_ADMITS
+
+
+def _admit_overhead(workdir: str) -> dict:
+    best = {"memory": float("inf"), "journaled": float("inf")}
+    for r in range(AB_REPEATS):
+        # rotate order so periodic host noise cannot bias one side
+        sides = (("memory", "journaled") if r % 2 == 0
+                 else ("journaled", "memory"))
+        for side in sides:
+            path = (os.path.join(workdir, f"ab_{r}_{side}.sqlite")
+                    if side == "journaled" else None)
+            best[side] = min(best[side], _admit_pass(path))
+    return {
+        "in_memory_mean_ms": round(best["memory"], 3),
+        "journaled_mean_ms": round(best["journaled"], 3),
+        "overhead_x": round(best["journaled"] / best["memory"], 3),
+    }
+
+
+def _recovery(workdir: str, residents: int) -> dict:
+    path = os.path.join(workdir, "recovery.sqlite")
+    journal = Journal(path)
+    ctl = DynamicController(RECOVERY_GN_TOTAL, transition="instant",
+                            journal=journal, allow_realloc=False,
+                            max_candidates=16)
+    metrics.enable(fresh=True)
+    try:
+        t0 = time.perf_counter()
+        for i in range(residents):
+            dec = ctl.admit(_task(SEED + i, RECOVERY_UTIL, f"r{i}"))
+            assert dec.admitted, (i, dec.reason)
+        build_s = time.perf_counter() - t0
+        fsync = metrics.registry().snapshot()["journal_fsync_seconds"]
+        fs = next(iter(fsync["series"].values()))
+        fsync_mean_ms = fs["sum"] / fs["count"] * 1e3
+    finally:
+        metrics.disable()
+    journal.close()                                # simulated kill -9
+
+    gc.collect()
+    gc.disable()
+    try:
+        cold = Journal(path)
+        t0 = time.perf_counter()
+        ctl2, report = recover_controller(cold)
+        recovery_ms = (time.perf_counter() - t0) * 1e3
+        cold.close()
+    finally:
+        gc.enable()
+    assert sorted(ctl2.allocation) == sorted(ctl.allocation), \
+        "recovery dropped or invented residents"
+    assert ctl2.bounds() == ctl.bounds(), "recovered bounds drifted"
+    assert not report.quarantined, (
+        f"clean journal quarantined {report.quarantined}"
+    )
+    return {
+        "residents": residents,
+        "journal_records": report.state.replayed,
+        "journal_bytes": os.path.getsize(path),
+        "build_s": round(build_s, 2),
+        "fsync_mean_ms": round(fsync_mean_ms, 3),
+        "recovery_ms": round(recovery_ms, 1),
+        "recertified": sum(len(v) for v in report.recert.values()),
+    }
+
+
+def run(rows: list | None = None, out: str = "BENCH_recovery.json",
+        residents: int = 100) -> dict:
+    rows = rows if rows is not None else []
+    workdir = tempfile.mkdtemp(prefix="bench_recovery")
+
+    _admit_pass(None)                              # warm-up (imports, JIT)
+    overhead = _admit_overhead(workdir)
+    recovery = _recovery(workdir, residents)
+
+    result = envelope(
+        "recovery",
+        config={
+            "seed": SEED,
+            "ab": {"gn_total": AB_GN_TOTAL, "admits": AB_ADMITS,
+                   "util": AB_UTIL, "repeats": AB_REPEATS,
+                   "timing": "best-of-repeats means, GC quiesced"},
+            "recovery": {"gn_total": RECOVERY_GN_TOTAL,
+                         "util": RECOVERY_UTIL},
+        },
+        admit_overhead=overhead,
+        recovery=recovery,
+    )
+
+    # the gate this benchmark exists to enforce: durability costs less
+    # than 2x the in-memory admission path
+    assert overhead["overhead_x"] < MAX_OVERHEAD_X, (
+        f"journaled admits are {overhead['overhead_x']}x the in-memory "
+        f"mean (ceiling {MAX_OVERHEAD_X}x)"
+    )
+
+    write_bench(out, result)
+    rows.append(("recovery,admit_overhead_x", overhead["overhead_x"]))
+    rows.append(("recovery,recovery_ms", recovery["recovery_ms"]))
+    rows.append(("recovery,residents", recovery["residents"]))
+    rows.append(("recovery,fsync_mean_ms", recovery["fsync_mean_ms"]))
+    return result
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="BENCH_recovery.json")
+    ap.add_argument("--residents", type=int, default=100,
+                    help="resident pool size for the recovery measurement")
+    args = ap.parse_args()
+    r = run(out=args.out, residents=args.residents)
+    oh, rec = r["admit_overhead"], r["recovery"]
+    print(f"admit: {oh['in_memory_mean_ms']} ms in-memory vs "
+          f"{oh['journaled_mean_ms']} ms journaled "
+          f"({oh['overhead_x']}x, ceiling {MAX_OVERHEAD_X}x)")
+    print(f"recovery: {rec['residents']} residents, "
+          f"{rec['journal_records']} records "
+          f"({rec['journal_bytes']} bytes) replayed + re-certified in "
+          f"{rec['recovery_ms']} ms "
+          f"(fsync mean {rec['fsync_mean_ms']} ms/append)")
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -16,7 +16,7 @@ import time
 #: is an error up front, not a silently empty run
 STAGES = (
     "fig4", "fig6", "fig8", "fig9", "fig10", "fig11", "fig12",
-    "churn", "rta", "federation", "preemption", "obs",
+    "churn", "rta", "federation", "preemption", "obs", "recovery",
     "roofline", "roofline_multipod",
 )
 
@@ -55,6 +55,7 @@ def main(argv=None) -> int:
         fig12_system_validation,
         obs_overhead,
         preemption_acceptance,
+        recovery_acceptance,
         roofline_table,
         rta_throughput,
         sched_acceptance,
@@ -72,6 +73,10 @@ def main(argv=None) -> int:
     stage("federation", federation_acceptance.run, rows)
     stage("preemption", preemption_acceptance.run, rows)
     stage("obs", obs_overhead.run, rows)
+    # the paper-scale acceptance figure is a 100-resident pool; the
+    # CI-scale default keeps the journal build inside the stage budget
+    stage("recovery", recovery_acceptance.run, rows,
+          residents=100 if args.full else 30)
     stage("roofline", roofline_table.run, rows)
     stage("roofline_multipod", roofline_table.run, rows, mesh="2x16x16")
 

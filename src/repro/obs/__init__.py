@@ -82,6 +82,34 @@ Metric name → emitting layer
                                           latest job
   monitor_drift                gauge      label task — EWMA of R/R̂
   monitor_alerts_total         counter    label kind — alerts raised
+  monitor_callback_errors_total counter   subscriber/alert callbacks that
+                                          raised (logged + skipped, never
+                                          propagated)
+
+``sched/journal.py`` (:class:`~repro.sched.Journal`):
+
+  journal_fsync_seconds        histogram  durable-commit latency per
+                                          appended record
+  journal_records_total        counter    label op — records written
+  journal_checkpoint_ms        histogram  compaction (snapshot + truncate)
+                                          wall-clock
+  journal_checkpoints_total    counter    compactions performed
+
+``sched/recovery.py`` (:func:`~repro.sched.recover`):
+
+  recovery_ms                  histogram  replay + re-certification
+                                          wall-clock per recovery
+  recovery_replayed_records_total counter journal records folded back
+  recovery_quarantined_total   counter    residents whose journaled R̂
+                                          failed re-certification
+  recovery_migrations_resolved_total counter label action=forward|back —
+                                          dangling two-phase migrations
+                                          resolved
+
+``sched/daemon.py`` (:class:`~repro.sched.daemon.SchedulerDaemon`):
+
+  daemon_requests_total        counter    label cmd — protocol requests
+  daemon_request_errors_total  counter    requests answered with an error
 """
 from .metrics import (  # noqa: F401
     MetricsRegistry,

@@ -35,6 +35,7 @@ attached is asserted in ``tests/test_obs.py``.
 from __future__ import annotations
 
 import dataclasses
+import logging
 import math
 from typing import Callable, Iterable, Optional
 
@@ -157,7 +158,17 @@ class BoundMonitor:
         self.alerts.append(alert)
         metrics.inc("monitor_alerts_total", kind=alert.kind)
         if self.on_alert is not None:
-            self.on_alert(alert)
+            # a raising alert handler must not abort the run it observes:
+            # the alert itself is already recorded above, so log, count,
+            # and keep going
+            try:
+                self.on_alert(alert)
+            except Exception:
+                metrics.inc("monitor_callback_errors_total")
+                logging.getLogger(__name__).exception(
+                    "on_alert callback raised for %s alert on task %r",
+                    alert.kind, alert.task,
+                )
 
     def observe_event(self, ev) -> None:
         kind = ev.kind

@@ -29,6 +29,7 @@ from typing import Optional
 
 from repro.core import FederatedResult, RTTask, TaskSet
 from repro.sched import CapacityBroker, DynamicController, EventTrace
+from repro.sched.journal import Journal
 
 __all__ = ["AdmissionController", "AdmissionDecision"]
 
@@ -55,6 +56,7 @@ class AdmissionController:
         placement: str = "least_loaded",
         preemption: str = "none",
         gpu_ctx_overhead: float = 0.0,
+        durable=None,
     ):
         # ``mode`` is accepted for signature compatibility with the one-shot
         # controller but IGNORED: the dynamic controller always runs its
@@ -68,10 +70,19 @@ class AdmissionController:
         # selects the GPU arbitration model the admissions are certified
         # against ("none" = federated dedication, "priority" = GCAPS-style
         # preemptive slices with ``gpu_ctx_overhead`` per switch).
+        # ``durable`` opts the front door into crash recovery: a journal
+        # path (or a prebuilt repro.sched.journal.Journal) makes every
+        # admission/removal a write-ahead transaction, recoverable via
+        # repro.sched.recovery (the scheduler daemon fronts exactly this).
+        # None (default) keeps the historical purely-in-memory behavior.
         self.gn_total = gn_total
         self.mode = mode
         self.hosts = hosts
         self._tightened = tightened
+        if durable is None or isinstance(durable, Journal):
+            self.journal: Optional[Journal] = durable
+        else:
+            self.journal = Journal(str(durable))
         if hosts > 1:
             self._dyn = None
             self._broker = CapacityBroker.build(
@@ -85,6 +96,7 @@ class AdmissionController:
                 placement=placement,
                 preemption=preemption,
                 gpu_ctx_overhead=gpu_ctx_overhead,
+                journal=self.journal,
             )
         else:
             self._dyn = DynamicController(
@@ -97,6 +109,7 @@ class AdmissionController:
                 engine=engine,
                 preemption=preemption,
                 gpu_ctx_overhead=gpu_ctx_overhead,
+                journal=self.journal,
             )
             self._broker = None
 
@@ -166,6 +179,17 @@ class AdmissionController:
         if self._broker is not None:
             return self._broker.release(name)
         return self._dyn.release(name)
+
+    def checkpoint(self) -> int:
+        """Compact the journal (snapshot current state + truncate the
+        log); returns the covered sequence number.  Durable front doors
+        only — the daemon calls this on graceful shutdown and on its
+        compaction cadence."""
+        if self.journal is None:
+            raise RuntimeError("checkpoint() needs a durable front door")
+        from repro.sched.recovery import serialize_state
+        front = self._dyn if self._dyn is not None else self._broker
+        return self.journal.checkpoint(serialize_state(front))
 
     def current_taskset(self) -> Optional[TaskSet]:
         front = self._dyn if self._dyn is not None else self._broker

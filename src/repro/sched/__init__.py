@@ -13,6 +13,12 @@ federation.py   CapacityBroker — multi-host federated admission over N
 trace.py        EventTrace — scheduler event telemetry with host-tagged
                 Chrome trace-event JSON export (chrome://tracing /
                 Perfetto)
+journal.py      Journal — sqlite write-ahead journal: every control-plane
+                transaction durable before its in-memory commit
+recovery.py     crash recovery — replay the journal into ledger state,
+                re-certify it, rebuild live controllers/brokers
+daemon.py       SchedulerDaemon — long-lived unix-socket service over a
+                journaled controller (python -m repro.sched.daemon)
 
 The static front door (:class:`repro.runtime.AdmissionController`) wraps
 :class:`DynamicController` (or a :class:`CapacityBroker`) in
@@ -36,6 +42,16 @@ from .federation import (
     Migration,
     register_placement,
 )
+from .journal import HostJournal, Journal
+from .recovery import (
+    RecoveryAlert,
+    RecoveryReport,
+    recover,
+    recover_broker,
+    recover_controller,
+    replay,
+    serialize_state,
+)
 from .trace import KINDS, SPAN_NAMES, EventTrace, HostTrace, TraceEvent
 
 __all__ = [
@@ -53,6 +69,15 @@ __all__ = [
     "BrokerDecision",
     "Migration",
     "register_placement",
+    "Journal",
+    "HostJournal",
+    "RecoveryAlert",
+    "RecoveryReport",
+    "replay",
+    "recover",
+    "recover_controller",
+    "recover_broker",
+    "serialize_state",
     "EventTrace",
     "HostTrace",
     "TraceEvent",

@@ -132,11 +132,16 @@ class CertificationEngine(abc.ABC):
         tables: AnalysisTables,
         memo: dict[tuple, float],
         probe: Optional[str] = None,
+        partial: bool = False,
     ) -> tuple[Optional[dict[str, float]], int, str]:
         """Full RTGPU analysis of the transitional set.
 
         Returns ``(bounds, analyses, reason)``; ``bounds`` is None when
-        some task fails.  Per-task results are memoized on the complete
+        some task fails.  With ``partial=True`` failure does not
+        short-circuit: every task gets a bound (``inf`` marks the
+        unschedulable ones) — the per-task view crash recovery needs to
+        quarantine exactly the residents whose journaled R̂ no longer
+        re-certifies.  Per-task results are memoized on the complete
         interference context — (higher-priority (task, GN) prefix, own
         (task, GN), bus blocking from below) — so successive
         certifications (e.g. the pinned admission loop, or re-certifying
@@ -184,6 +189,9 @@ class CertificationEngine(abc.ABC):
                 else:
                     metrics.inc("certify_memo_hits_total")
                 if not math.isfinite(r):
+                    if partial:
+                        worst = math.inf
+                        break
                     metrics.inc("certify_analyses_total", amount=analyses,
                                 engine=self.name)
                     return None, analyses, f"task {e.task.name!r} unschedulable"

@@ -79,6 +79,7 @@ from repro.obs import metrics
 
 from .capacity import Entry, SlicePool
 from .certify import make_certifier
+from .journal import task_to_dict
 from .trace import EventTrace
 
 __all__ = ["SchedDecision", "DynamicController"]
@@ -120,6 +121,7 @@ class DynamicController:
         engine: str = "batch",
         preemption: "PreemptionModel | str | None" = None,
         gpu_ctx_overhead: float = 0.0,
+        journal=None,
     ):
         if transition not in ("boundary", "instant"):
             raise ValueError(f"unknown transition mode {transition!r}")
@@ -129,6 +131,13 @@ class DynamicController:
         self.allow_realloc = allow_realloc
         self.max_candidates = max_candidates
         self.trace = trace
+        # Write-ahead journal (repro.sched.journal.Journal or a host-scoped
+        # view).  When set, every state-changing transaction is durably
+        # recorded BEFORE the in-memory commit, so a crashed controller is
+        # rebuilt bit-identically by repro.sched.recovery.  None (default)
+        # keeps the controller purely in-memory — zero overhead, byte-
+        # identical decisions and traces.
+        self.journal = journal
         # GPU arbitration model.  "none" (default) is federated dedication:
         # slice holdings are capacity-disjoint and kernels never contend.
         # "priority" certifies GCAPS-style preemptive GPU slices: kernels
@@ -154,6 +163,13 @@ class DynamicController:
             engine, tightened=tightened, min_work=self._BATCH_MIN_WORK,
             preemption=self.preemption,
         )
+        if journal is not None:
+            # the semantic config the journaled bounds were certified under;
+            # re-opening the journal with a different one is an error
+            journal.ensure_meta(
+                f"host{getattr(journal, 'host', None) or 0}",
+                self.journal_config(),
+            )
         self._pool = SlicePool(gn_total)
         self._bounds: dict[str, float] = {}
         self._tables = AnalysisTables()
@@ -279,6 +295,36 @@ class DynamicController:
         return SetAnalysis(tuple(
             inc.analyze_task(k, alloc_list) for k in range(len(ts))
         ))
+
+    def journal_config(self) -> dict:
+        """The semantic configuration journaled as this controller's meta
+        scope: everything that determines what a journaled R̂ *means*.
+        (Engine choice is excluded on purpose — scalar and batched
+        certification are bound-identical, so either may replay the
+        other's journal.)"""
+        return {
+            "gn_total": self.gn_total,
+            "tightened": self.tightened,
+            "transition": self.transition,
+            "preemption": self.preemption.mode,
+            "gpu_ctx_overhead": self.preemption.ctx,
+        }
+
+    def restore(self, entries, bounds: dict[str, float], epoch: int) -> None:
+        """Install recovered state (see :mod:`repro.sched.recovery`).
+
+        Only valid on a fresh controller: recovery rebuilds the ledger
+        from the journal and re-certifies it, then hands the result here.
+        Entry order is preserved (it is the deadline-monotonic stable-sort
+        tiebreak, so it must match the pre-crash admit order)."""
+        if len(self._pool):
+            raise RuntimeError("restore() requires a fresh controller")
+        pool = SlicePool(self.gn_total)
+        for e in entries:
+            pool.reserve(e.copy())
+        self._pool = pool
+        self._bounds = dict(bounds)
+        self.epoch = int(epoch)
 
     def fingerprint(self) -> tuple:
         """Hashable snapshot of ALL mutable controller state — the ledger,
@@ -493,6 +539,18 @@ class DynamicController:
         path: str,
         tried: int,
     ) -> SchedDecision:
+        if self.journal is not None:
+            # write-ahead: the certified decision is durable before any
+            # in-memory state changes.  The payload carries everything
+            # replay needs — the task spec, its GN, the full post-op
+            # allocation map (a realloc commit re-sizes residents too),
+            # the certified bounds and the post-op epoch.
+            self.journal.append(
+                "admit", cand.task.name, t=t,
+                spec=task_to_dict(cand.task), gn=cand.alloc, path=path,
+                alloc={e.task.name: e.alloc for e in pool.entries()},
+                bounds=bounds, epoch=self.epoch + 1,
+            )
         pool.reserve(cand)
         self._pool.adopt(pool)
         self._bounds = bounds
@@ -533,8 +591,13 @@ class DynamicController:
         if e is None or e.departing:
             return False
         if self.transition == "instant":
+            if self.journal is not None:
+                self.journal.append("release", name, t=t,
+                                    epoch=self.epoch + 1)
             self._reclaim(name, t)
             return True
+        if self.journal is not None:
+            self.journal.append("depart", name, t=t)
         self._pool.mark_departing(name)
         if self.trace is not None:
             self.trace.record(t, "depart", name, gn=e.alloc)
@@ -558,9 +621,15 @@ class DynamicController:
         if e is None:
             return "none"
         if e.departing:
+            if self.journal is not None:
+                self.journal.append("boundary", name, t=t,
+                                    result="reclaimed", epoch=self.epoch + 1)
             self._reclaim(name, t)
             return "reclaimed"
         if e.in_transition:
+            if self.journal is not None:
+                self.journal.append("boundary", name, t=t,
+                                    result="committed")
             e.commit()
             if self.trace is not None:
                 self.trace.record(t, "realloc", name, committed=e.alloc)
@@ -620,6 +689,12 @@ class DynamicController:
             return SchedDecision(
                 False, None, None, tried=analyses,
                 reason=f"rate change unschedulable: {reason}",
+            )
+        if self.journal is not None:
+            self.journal.append(
+                "update", name, t=t, period=period, deadline=deadline,
+                staged=self.transition != "instant",
+                bounds=bounds, epoch=self.epoch + 1,
             )
         self._pool.adopt(pool)
         self._bounds = bounds

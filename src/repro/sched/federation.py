@@ -169,6 +169,7 @@ class CapacityBroker:
         realloc_hosts: int = 1,
         trace: Optional[EventTrace] = None,
         host_speeds: Optional[Sequence[float]] = None,
+        journal=None,
     ):
         if not hosts:
             raise ValueError("broker needs at least one host")
@@ -202,6 +203,14 @@ class CapacityBroker:
         # re-allocation search after every pinned placement failed
         self.realloc_hosts = realloc_hosts
         self.trace = trace
+        # Write-ahead journal (repro.sched.journal.Journal).  The broker
+        # journals only its two-phase migration protocol (intent / commit /
+        # abort); per-host admits, releases and boundaries are journaled by
+        # the host controllers through their host-scoped views — recovery
+        # re-derives active hosts and in-flight moves from that total order.
+        self.journal = journal
+        if journal is not None:
+            journal.ensure_meta("broker", self.journal_config())
         self._active: dict[str, int] = {}          # name -> active host
         self._migrations: dict[str, Migration] = {}  # in-flight moves
         self.migration_log: list[Migration] = []     # completed moves
@@ -220,13 +229,16 @@ class CapacityBroker:
         max_candidates: int = 2000,
         preemption: str = "none",
         gpu_ctx_overhead: float = 0.0,
+        journal=None,
         **broker_kw,
     ) -> "CapacityBroker":
         """Fleet of ``n_hosts`` identical hosts; controller events are
         recorded host-tagged into ``trace`` (one Chrome lane group per
         host).  ``preemption``/``gpu_ctx_overhead`` select each host's GPU
         arbitration model (every host runs the same one); per-host
-        ``host_speeds`` pass through to the broker."""
+        ``host_speeds`` pass through to the broker.  A ``journal`` is
+        shared: each host writes through its host-scoped view and the
+        broker journals the migration protocol."""
         hosts = [
             DynamicController(
                 gn_per_host,
@@ -238,10 +250,41 @@ class CapacityBroker:
                 engine=engine,
                 preemption=preemption,
                 gpu_ctx_overhead=gpu_ctx_overhead,
+                journal=journal.for_host(h) if journal is not None else None,
             )
             for h in range(n_hosts)
         ]
-        return cls(hosts, trace=trace, **broker_kw)
+        return cls(hosts, trace=trace, journal=journal, **broker_kw)
+
+    # ---- durability ---------------------------------------------------------
+
+    def journal_config(self) -> dict:
+        """Broker-level semantic configuration for the journal ``meta``
+        table (the per-host configs live under their own scopes).  A
+        callable placement journals as ``"custom"`` — recovery then needs
+        the callable re-supplied."""
+        return {
+            "n_hosts": len(self.hosts),
+            "placement": (self.placement if isinstance(self.placement, str)
+                          else "custom"),
+            "migrate_on_departure": self.migrate_on_departure,
+            "imbalance_threshold": self.imbalance_threshold,
+            "max_migrations_per_event": self.max_migrations_per_event,
+            "realloc_hosts": self.realloc_hosts,
+            "host_speeds": list(self.speeds),
+        }
+
+    def restore(self, active: dict, migrations: dict) -> None:
+        """Install recovered fleet bookkeeping (active hosts + in-flight
+        migrations); the per-host ledgers are restored on the host
+        controllers by :mod:`repro.sched.recovery`."""
+        if self._active or self._migrations:
+            raise RuntimeError("restore() requires a fresh broker")
+        self._active = {n: int(h) for n, h in active.items()}
+        self._migrations = {
+            n: m if isinstance(m, Migration) else Migration(**m)
+            for n, m in migrations.items()
+        }
 
     # ---- fleet introspection ------------------------------------------------
 
@@ -399,8 +442,16 @@ class CapacityBroker:
         h = self._active.get(name)
         if h is None:
             return False
-        mig = self._migrations.pop(name, None)
+        mig = self._migrations.get(name)
         if mig is not None:
+            if self.journal is not None:
+                # abort the in-flight move BEFORE any side is touched: a
+                # crash inside this fan-out must not be resolved as a
+                # still-running migration
+                self.journal.append("migrate", name, t=t, phase="abort",
+                                    src=mig.src, dst=mig.dst,
+                                    reason="released mid-migration")
+            del self._migrations[name]
             dst = self.hosts[mig.dst]
             dst.release(name, t=t)
             dst.job_boundary(name, t=t)   # no jobs ever ran there: boundary now
@@ -461,10 +512,22 @@ class CapacityBroker:
 
     # ---- departure-imbalance migration --------------------------------------
 
-    def _rebalance(self, t: float) -> None:
+    def rebalance(self, t: float = 0.0) -> int:
+        """Run the departure-imbalance migration pass now; returns the
+        number of migrations started.  ``release``/``job_boundary`` call
+        this automatically when ``migrate_on_departure`` — the public
+        entry point exists for callers that own the trigger themselves
+        (the scheduler daemon, and the crash-matrix tests that need
+        migrations as standalone journal transactions)."""
+        started = 0
         for _ in range(self.max_migrations_per_event):
             if not self._start_one_migration(t):
                 break
+            started += 1
+        return started
+
+    def _rebalance(self, t: float) -> None:
+        self.rebalance(t)
 
     def _migration_candidates(self, src: int) -> list:
         """Movable entries on ``src``: not departing, not mid-transition,
@@ -499,6 +562,13 @@ class CapacityBroker:
             spans = (self.trace is not None
                      and getattr(self.trace, "spans", False))
             t0 = time.perf_counter() if spans else 0.0
+            if self.journal is not None:
+                # two-phase: the intent is durable before the target host
+                # certifies.  Recovery resolves a crash inside the window
+                # deterministically — forward iff the target's admit
+                # record committed, back otherwise.
+                self.journal.append("migrate", name, t=t, phase="intent",
+                                    src=src, dst=dst)
             dec = dst_ctl.admit(e.task, t=t)   # envelope-certified, or skip
             if spans:
                 self.trace.span(
@@ -506,8 +576,16 @@ class CapacityBroker:
                     target=name, src=src, dst=dst, hit=dec.admitted,
                 )
             if not dec.admitted:
+                if self.journal is not None:
+                    self.journal.append("migrate", name, t=t, phase="abort",
+                                        src=src, dst=dst,
+                                        reason="target rejected")
                 continue
             src_ctl.release(name, t=t)         # release-at-boundary
+            if self.journal is not None:
+                self.journal.append("migrate", name, t=t, phase="commit",
+                                    src=src, dst=dst,
+                                    completed=name not in src_ctl.pool)
             metrics.inc("fleet_migrations_total")
             mig = Migration(name=name, src=src, dst=dst, started=t)
             if self.trace is not None:

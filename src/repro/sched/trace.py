@@ -36,7 +36,10 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import logging
 from typing import Iterable, Optional
+
+from repro.obs import metrics
 
 __all__ = ["TraceEvent", "EventTrace", "HostTrace", "KINDS", "SPAN_NAMES"]
 
@@ -109,7 +112,17 @@ class EventTrace:
         )
         self.events.append(ev)
         for cb in self._subscribers:
-            cb(ev)
+            # subscribers observe the stream; one raising must neither
+            # abort the producer (the simulation / controller mid-commit)
+            # nor starve the subscribers after it — log, count, continue
+            try:
+                cb(ev)
+            except Exception:
+                metrics.inc("monitor_callback_errors_total")
+                logging.getLogger(__name__).exception(
+                    "trace subscriber raised on %s event for task %r",
+                    ev.kind, ev.task,
+                )
         return ev
 
     def attach(self, callback) -> "EventTrace":
