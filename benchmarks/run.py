@@ -16,8 +16,8 @@ import time
 #: is an error up front, not a silently empty run
 STAGES = (
     "fig4", "fig6", "fig8", "fig9", "fig10", "fig11", "fig12",
-    "churn", "rta", "federation", "preemption", "obs", "recovery",
-    "roofline", "roofline_multipod",
+    "churn", "rta", "federation", "scale", "preemption", "obs",
+    "recovery", "roofline", "roofline_multipod",
 )
 
 
@@ -58,6 +58,7 @@ def main(argv=None) -> int:
         recovery_acceptance,
         roofline_table,
         rta_throughput,
+        scale_acceptance,
         sched_acceptance,
     )
 
@@ -71,6 +72,8 @@ def main(argv=None) -> int:
     stage("churn", churn_acceptance.run, rows)
     stage("rta", rta_throughput.run, rows)
     stage("federation", federation_acceptance.run, rows)
+    # --full adds the 1e5-resident level (minutes); default tops at 1e4
+    stage("scale", scale_acceptance.run, rows, full=args.full)
     stage("preemption", preemption_acceptance.run, rows)
     stage("obs", obs_overhead.run, rows)
     # the paper-scale acceptance figure is a 100-resident pool; the

@@ -54,6 +54,20 @@ Metric name → emitting layer
   fleet_admit_total            counter    label result — fleet admissions
   fleet_hosts_tried            histogram  hosts offered per admission
   fleet_migrations_total       counter    departure-imbalance moves started
+  fleet_residents              gauge      resident services in the fleet
+  fleet_admissions_per_sec     gauge      admission throughput over the
+                                          last 64 accepted admits
+  placement_hosts_scanned      histogram  hosts in each placement order
+                                          (post digest/drain masking)
+  fleet_hosts_added_total      counter    elastic add_host joins
+  fleet_hosts_retired_total    counter    drained hosts fully retired
+
+``sched/fleet.py`` (:class:`~repro.sched.BrokerTree`):
+
+  broker_shard_descents_total  counter    label phase=pinned|realloc —
+                                          shard admissions actually
+                                          descended (pruned shards never
+                                          count)
 
 ``core/rta_batch.py`` (vectorized analyzer):
 

@@ -30,7 +30,9 @@ lives there, exactly once):
     hosts (one CPU + bus + slice-pool resource lane each, lockstepped in
     one engine), departures trigger imbalance migrations executed through
     the mode-change protocol, and the same observed-R ≤ certified-R̂ check
-    runs per job on whichever host it executed.
+    runs per job on whichever host it executed; an optional ``elastic``
+    schedule grows (``add_host``) and shrinks (drain-then-retire) the
+    fleet mid-run.
 
 All record into an optional :class:`repro.sched.EventTrace` (releases,
 CPU preemptions, completions, deadline misses — host-tagged in the fleet
@@ -464,6 +466,9 @@ class FleetSimResult(ChurnSimResult):
     placements: dict[str, int]
     migrations: list[dict]
     n_hosts: int
+    # elastic fleet events applied during the run, in order:
+    # {"kind": "add"|"retire", "host": h, "t": t, "ok": bool}
+    fleet_events: list[dict] = dataclasses.field(default_factory=list)
 
 
 class _FleetChurnPolicy(SchedulingPolicy):
@@ -486,6 +491,7 @@ class _FleetChurnPolicy(SchedulingPolicy):
         rng: np.random.Generator,
         release_jitter: bool,
         worst_case: bool,
+        elastic: Sequence[tuple] = (),
     ):
         self.broker = broker
         self.rng = rng
@@ -493,6 +499,12 @@ class _FleetChurnPolicy(SchedulingPolicy):
         self.worst_case = worst_case
         self.pending = sorted(events, key=lambda e: (e.time, e.name))
         self.ev_idx = 0
+        # elastic fleet schedule: (t, "add", gn_total[, speed]) grows the
+        # fleet, (t, "retire", host) drains-then-retires; merged with the
+        # churn stream in global time order (fleet ops first on ties)
+        self.fleet_pending = sorted(elastic, key=lambda e: e[0])
+        self.fl_idx = 0
+        self.fleet_log: list[dict] = []
         self.next_release: dict[tuple, float] = {}
         self.responses: dict[str, list[float]] = {}
         self.bounds: dict[str, list[float]] = {}
@@ -566,39 +578,81 @@ class _FleetChurnPolicy(SchedulingPolicy):
                     progress = True
 
     def begin_step(self, now: float) -> None:
-        eng = self.engine
-        while (
-            self.ev_idx < len(self.pending)
-            and self.pending[self.ev_idx].time <= now + _EPS
-        ):
-            ev = self.pending[self.ev_idx]
-            self.ev_idx += 1
-            if ev.kind == "admit":
-                dec = self.broker.admit(ev.task, t=now)
-                if dec.admitted:
-                    h = dec.host
-                    self.admitted.append(ev.name)
-                    self.placements[ev.name] = h
-                    eng.jobs[(h, ev.name)] = None
-                    self.next_release[(h, ev.name)] = now
-                    # setdefault: a re-admission of a departed name must
-                    # extend its history, not erase the first residency
-                    self.responses.setdefault(ev.name, [])
-                    self.bounds.setdefault(ev.name, [])
-                    self.misses.setdefault(ev.name, 0)
-                    self.jobs_done.setdefault(ev.name, 0)
-                    self._lift_bounds()
-                else:
-                    self.rejected.append(ev.name)
-            elif ev.kind == "release":
-                h = self.broker.active_host(ev.name)
-                if self.broker.release(ev.name, t=now):
-                    if eng.jobs.get((h, ev.name)) is None:
-                        self._boundary(ev.name, now)   # idle: reclaim now
-                    self._drain_idle_migrations(now)
-                    self._lift_bounds()
+        # merge the churn and elastic streams in global time order so a
+        # retire at t precedes (and its drain migrations can absorb) an
+        # arrival at t' > t even when the engine wakes once for both
+        while True:
+            ct = (
+                self.pending[self.ev_idx].time
+                if self.ev_idx < len(self.pending) else math.inf
+            )
+            ft = (
+                self.fleet_pending[self.fl_idx][0]
+                if self.fl_idx < len(self.fleet_pending) else math.inf
+            )
+            if min(ct, ft) > now + _EPS:
+                break
+            if ft <= ct:
+                fe = self.fleet_pending[self.fl_idx]
+                self.fl_idx += 1
+                self._apply_fleet_event(fe, now)
             else:
-                raise ValueError(f"unknown churn event kind {ev.kind!r}")
+                ev = self.pending[self.ev_idx]
+                self.ev_idx += 1
+                self._apply_churn_event(ev, now)
+
+    def _apply_fleet_event(self, fe: tuple, now: float) -> None:
+        kind = fe[1]
+        if kind == "add":
+            speed = float(fe[3]) if len(fe) > 3 else 1.0
+            h = self.broker.add_host(
+                gn_total=int(fe[2]), speed=speed, t=now
+            )
+            self.fleet_log.append(
+                {"kind": "add", "host": h, "t": now, "ok": True}
+            )
+        elif kind == "retire":
+            h = int(fe[2])
+            ok = self.broker.retire_host(h, t=now)
+            self.fleet_log.append(
+                {"kind": "retire", "host": h, "t": now, "ok": ok}
+            )
+            if ok:
+                # drain migrations off idle members complete at their
+                # (immediate) job boundary; busy members at their next
+                self._drain_idle_migrations(now)
+                self._lift_bounds()
+        else:
+            raise ValueError(f"unknown fleet event kind {kind!r}")
+
+    def _apply_churn_event(self, ev: ChurnEvent, now: float) -> None:
+        eng = self.engine
+        if ev.kind == "admit":
+            dec = self.broker.admit(ev.task, t=now)
+            if dec.admitted:
+                h = dec.host
+                self.admitted.append(ev.name)
+                self.placements[ev.name] = h
+                eng.jobs[(h, ev.name)] = None
+                self.next_release[(h, ev.name)] = now
+                # setdefault: a re-admission of a departed name must
+                # extend its history, not erase the first residency
+                self.responses.setdefault(ev.name, [])
+                self.bounds.setdefault(ev.name, [])
+                self.misses.setdefault(ev.name, 0)
+                self.jobs_done.setdefault(ev.name, 0)
+                self._lift_bounds()
+            else:
+                self.rejected.append(ev.name)
+        elif ev.kind == "release":
+            h = self.broker.active_host(ev.name)
+            if self.broker.release(ev.name, t=now):
+                if eng.jobs.get((h, ev.name)) is None:
+                    self._boundary(ev.name, now)   # idle: reclaim now
+                self._drain_idle_migrations(now)
+                self._lift_bounds()
+        else:
+            raise ValueError(f"unknown churn event kind {ev.kind!r}")
 
     def release_jobs(self, now: float) -> None:
         eng = self.engine
@@ -639,6 +693,8 @@ class _FleetChurnPolicy(SchedulingPolicy):
                 t = min(t, self.next_release.get(key, math.inf))
         if self.ev_idx < len(self.pending):
             t = min(t, self.pending[self.ev_idx].time)
+        if self.fl_idx < len(self.fleet_pending):
+            t = min(t, self.fleet_pending[self.fl_idx][0])
         return t
 
     def on_job_complete(self, key, job, now, response) -> None:
@@ -687,12 +743,22 @@ def simulate_fleet(
     gpu_ctx_overhead: float = 0.0,
     host_speeds: Optional[Sequence[float]] = None,
     monitor=None,
+    elastic: Sequence[tuple] = (),
 ) -> FleetSimResult:
     """Execute a churn trace across ``n_hosts`` broker-routed hosts.
 
     ``monitor`` behaves as in :func:`simulate_churn`: attached to the
     run's event trace (created internally when ``trace`` is not given)
-    to track observed R vs certified R̂ without touching the trace."""
+    to track observed R vs certified R̂ without touching the trace.
+
+    ``elastic`` is an optional fleet schedule merged with the churn
+    stream in global time order: ``(t, "add", gn_total[, speed])`` joins
+    a host mid-run (mirroring host 0's configuration);
+    ``(t, "retire", h)`` drains host ``h`` through certified migrations
+    and retires it once empty.  A retire that cannot place every
+    resident elsewhere is refused and logged
+    (``result.fleet_events[..]["ok"] is False``) — the fleet keeps
+    running on the undrained host."""
     if monitor is not None:
         if trace is None:
             trace = EventTrace()
@@ -729,7 +795,7 @@ def simulate_fleet(
             )
     policy = _FleetChurnPolicy(
         events, broker, np.random.default_rng(seed), release_jitter,
-        worst_case,
+        worst_case, elastic=elastic,
     )
     DiscreteEventEngine(policy, trace=trace).run(horizon)
     return FleetSimResult(
@@ -745,4 +811,5 @@ def simulate_fleet(
             for m in broker.migration_log
         ],
         n_hosts=len(broker.hosts),
+        fleet_events=policy.fleet_log,
     )

@@ -8,8 +8,13 @@ certify.py      CertificationEngine — scalar / batched / preemptive
 controller.py   DynamicController — the job-boundary mode-change protocol
                 driving the ledger and a certification engine
 federation.py   CapacityBroker — multi-host federated admission over N
-                per-host controllers (pluggable placement, rejection
-                fallback, departure-imbalance migration)
+                per-host controllers (vectorized pluggable placement,
+                rejection fallback, departure-imbalance migration,
+                elastic add_host / certified drain-and-retire)
+fleet.py        BrokerTree — hierarchical broker sharding
+                (brokers-of-brokers with aggregate capacity digests, so
+                admission descends only the shards that can plausibly
+                fit an arrival)
 trace.py        EventTrace — scheduler event telemetry with host-tagged
                 Chrome trace-event JSON export (chrome://tracing /
                 Perfetto)
@@ -35,6 +40,7 @@ from .certify import (
     make_certifier,
     transitional_vectors,
 )
+from .certify import MemoOverlay
 from .controller import DynamicController, SchedDecision
 from .federation import (
     BrokerDecision,
@@ -42,6 +48,7 @@ from .federation import (
     Migration,
     register_placement,
 )
+from .fleet import BrokerTree
 from .journal import HostJournal, Journal
 from .recovery import (
     RecoveryAlert,
@@ -61,10 +68,12 @@ __all__ = [
     "ScalarCertifier",
     "BatchCertifier",
     "PreemptiveCertifier",
+    "MemoOverlay",
     "make_certifier",
     "transitional_vectors",
     "DynamicController",
     "SchedDecision",
+    "BrokerTree",
     "CapacityBroker",
     "BrokerDecision",
     "Migration",

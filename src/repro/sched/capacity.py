@@ -21,15 +21,31 @@ sorting (a stable sort over ``entries()``) deterministic.
 ``max(committed, staged)`` slices (``gn_hi``) — the mode-change protocol's
 safety invariant: capacity is never handed out while any job that was
 certified against it may still be in flight.
+
+**Incremental accounting.**  ``capacity_in_use`` is maintained as a
+running counter updated by every mutation (reserve / reclaim /
+set_alloc / commit), not recomputed from the entries — placement scoring
+across a large fleet reads per-host free capacity on every arrival, so
+an O(residents) sum here puts an O(total residents) term on the fleet
+admit path.  Anything that changes an entry's ``gn_hi`` must therefore
+go through the pool API (:meth:`SlicePool.set_alloc` /
+:meth:`SlicePool.commit`) rather than mutating the entry in place.
+``REPRO_DEBUG=1`` cross-checks the counter against the recomputed sum on
+every read.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Iterator, Optional
 
 from repro.core import RTTask
 
 __all__ = ["Entry", "SlicePool"]
+
+#: opt-in invariant checking (read once at import): the incremental
+#: capacity counter is asserted against the from-scratch sum on every read
+_DEBUG = os.environ.get("REPRO_DEBUG", "") == "1"
 
 
 @dataclasses.dataclass
@@ -100,6 +116,9 @@ class SlicePool:
     def __init__(self, gn_total: int):
         self.gn_total = gn_total
         self._entries: dict[str, Entry] = {}
+        # running envelope-capacity counter (sum of gn_hi over entries);
+        # every mutation keeps it in step so reads are O(1)
+        self._in_use = 0
 
     # ---- views --------------------------------------------------------------
 
@@ -135,8 +154,16 @@ class SlicePool:
     @property
     def capacity_in_use(self) -> int:
         """Envelope capacity: committed and staged slices both count until
-        the transition commits (the protocol's safety invariant)."""
-        return sum(e.gn_hi for e in self._entries.values())
+        the transition commits (the protocol's safety invariant).  O(1):
+        a running counter, cross-checked under ``REPRO_DEBUG=1``."""
+        if _DEBUG:
+            recomputed = sum(e.gn_hi for e in self._entries.values())
+            assert self._in_use == recomputed, (
+                f"slice ledger counter desync: cached {self._in_use} != "
+                f"recomputed {recomputed} (an entry's gn_hi was mutated "
+                f"without going through the pool API)"
+            )
+        return self._in_use
 
     @property
     def free_capacity(self) -> int:
@@ -156,10 +183,12 @@ class SlicePool:
         :meth:`adopt` on success or drop on rejection."""
         child = SlicePool(self.gn_total)
         child._entries = {n: e.copy() for n, e in self._entries.items()}
+        child._in_use = self._in_use
         return child
 
     def adopt(self, other: "SlicePool") -> None:
         self._entries = other._entries
+        self._in_use = other._in_use
 
     # ---- mutations ----------------------------------------------------------
 
@@ -169,10 +198,34 @@ class SlicePool:
         if name in self._entries:
             raise ValueError(f"name {name!r} already resident")
         self._entries[name] = entry
+        self._in_use += entry.gn_hi
 
     def reclaim(self, name: str) -> Entry:
         """Remove a resident, returning its slices to the pool."""
-        return self._entries.pop(name)
+        e = self._entries.pop(name)
+        self._in_use -= e.gn_hi
+        return e
+
+    def set_alloc(self, name: str, alloc: int) -> None:
+        """Re-size ``name``'s committed allocation (instant-mode
+        re-balancing), clearing any staged allocation.  The pool-API twin
+        of assigning ``entry.alloc`` directly — required so the running
+        capacity counter tracks the envelope change."""
+        e = self._entries[name]
+        self._in_use -= e.gn_hi
+        e.alloc = int(alloc)
+        e.staged_alloc = None
+        self._in_use += e.gn_hi
+
+    def commit(self, name: str) -> Entry:
+        """Job-boundary commit of ``name``'s staged state (the pool-API
+        twin of :meth:`Entry.commit`): staged parameters become committed
+        and any envelope surplus returns to the pool."""
+        e = self._entries[name]
+        self._in_use -= e.gn_hi
+        e.commit()
+        self._in_use += e.gn_hi
+        return e
 
     def mark_departing(self, name: str) -> bool:
         """Flag ``name`` as departing (slices stay held until reclaim)."""

@@ -50,6 +50,7 @@ from .capacity import Entry
 
 __all__ = [
     "CertificationEngine",
+    "MemoOverlay",
     "ScalarCertifier",
     "BatchCertifier",
     "PreemptiveCertifier",
@@ -83,6 +84,45 @@ def _memo_key(
     if g_blocking is not None:
         key = key + (g_blocking[k],)
     return key
+
+
+class MemoOverlay:
+    """Copy-on-write view over the controller's certify memo.
+
+    Every transactional operation used to snapshot the memo with
+    ``dict(self._memo)`` so a rejected decision could drop its writes —
+    an O(memo) copy (up to ``_MEMO_LIMIT`` = 20k entries) on EVERY admit,
+    which is exactly the O(total-resident-history) term that kept fleet
+    admission from being O(affected neighborhood).  The overlay replaces
+    the copy: reads fall through to the shared base dict, writes land in
+    a private local dict, and only a *successful* decision flushes the
+    local writes into the base (:meth:`flush_into`).  A rejection drops
+    the overlay — the base was never touched — preserving the
+    fork-and-adopt transactionality byte for byte.
+
+    Only the two operations the certification paths use are implemented
+    (``get`` and item assignment); memo values are response-time floats
+    and never ``None``, so the sentinel fall-through in :meth:`get` is
+    exact."""
+
+    __slots__ = ("base", "local")
+
+    def __init__(self, base: dict):
+        self.base = base
+        self.local: dict = {}
+
+    def get(self, key, default=None):
+        v = self.local.get(key)
+        if v is not None:
+            return v
+        return self.base.get(key, default)
+
+    def __setitem__(self, key, value) -> None:
+        self.local[key] = value
+
+    def flush_into(self, base: dict) -> None:
+        """Commit the transaction's writes into the shared base memo."""
+        base.update(self.local)
 
 
 def transitional_vectors(

@@ -78,7 +78,7 @@ from repro.core.rta import RtgpuIncremental, SetAnalysis
 from repro.obs import metrics
 
 from .capacity import Entry, SlicePool
-from .certify import make_certifier
+from .certify import MemoOverlay, make_certifier
 from .journal import task_to_dict
 from .trace import EventTrace
 
@@ -185,6 +185,13 @@ class DynamicController:
         # any admit/release/re-size changes the fingerprint and re-arms
         # the search.  Bounded FIFO — an evicted entry only costs a redo.
         self._realloc_futile: dict[tuple, None] = {}
+        # Capacity-change listeners: zero-argument callables fired after
+        # any committed change to this host's envelope capacity (admit,
+        # reclaim, boundary commit, restore).  The broker subscribes one
+        # per host to keep its fleet-wide free-capacity array incremental
+        # — correct even when callers mutate a host directly rather than
+        # through the broker.
+        self._capacity_listeners: list = []
         self.epoch = 0
 
     # Pinned-sweep crossover: (candidate GNs x tasks analyzed) above which
@@ -205,6 +212,18 @@ class DynamicController:
             self._memo.clear()
         if len(self._tables) > self._TABLES_LIMIT:
             self._tables.adopt(AnalysisTables())
+
+    # ---- capacity-change notification ---------------------------------------
+
+    def add_capacity_listener(self, fn) -> None:
+        """Subscribe a zero-argument callable to committed capacity
+        changes (fired after the change lands, so reads inside the
+        callback see the new state)."""
+        self._capacity_listeners.append(fn)
+
+    def _notify_capacity(self) -> None:
+        for fn in self._capacity_listeners:
+            fn()
 
     # ---- introspection ------------------------------------------------------
 
@@ -325,6 +344,7 @@ class DynamicController:
         self._pool = pool
         self._bounds = dict(bounds)
         self.epoch = int(epoch)
+        self._notify_capacity()
 
     def fingerprint(self) -> tuple:
         """Hashable snapshot of ALL mutable controller state — the ledger,
@@ -395,7 +415,9 @@ class DynamicController:
                 break
         tried = 0
         fork = self._tables.fork()
-        memo = dict(self._memo)
+        # copy-on-write: reads hit the shared memo, writes stay private
+        # until commit — no O(memo) snapshot per admission attempt
+        memo = MemoOverlay(self._memo)
         pool = self._pool.fork()
         residents = pool.entries()
         spans = self.trace is not None and getattr(self.trace, "spans", False)
@@ -484,7 +506,7 @@ class DynamicController:
         task: RTTask,
         pool: SlicePool,
         fork: AnalysisTables,
-        memo: dict[tuple, float],
+        memo: MemoOverlay,
         t: float,
         tried0: int,
     ) -> tuple[Optional[SchedDecision], int]:
@@ -516,8 +538,9 @@ class DynamicController:
             return None, fed.candidates_tried
         new_gn = {e.task.name: g for e, g in zip(ordered, fed.alloc)}
         for e in residents:
-            e.alloc = new_gn[e.task.name]
-            e.staged_alloc = None
+            # through the pool API so the incremental capacity counter
+            # tracks the re-size (the candidate isn't reserved yet)
+            pool.set_alloc(e.task.name, new_gn[e.task.name])
         cand_entry.alloc = new_gn[task.name]
         bounds = {ta.name: ta.response for ta in fed.analysis.tasks}
         # re-balanced bounds into the certify memo: the next sweep's
@@ -534,7 +557,7 @@ class DynamicController:
         bounds: dict[str, float],
         pool: SlicePool,
         fork: AnalysisTables,
-        memo: dict[tuple, float],
+        memo: MemoOverlay,
         t: float,
         path: str,
         tried: int,
@@ -555,9 +578,10 @@ class DynamicController:
         self._pool.adopt(pool)
         self._bounds = bounds
         self._tables.adopt(fork)
-        self._memo = memo
+        memo.flush_into(self._memo)
         self._trim_caches()
         self.epoch += 1
+        self._notify_capacity()
         if self.trace is not None:
             self.trace.record(
                 t, "admit", cand.task.name, gn=cand.alloc, path=path,
@@ -608,6 +632,7 @@ class DynamicController:
         self._bounds.pop(name, None)
         self.epoch += 1
         metrics.inc("sched_reclaim_total")
+        self._notify_capacity()
         if self.trace is not None:
             self.trace.record(t, "reclaim", name, gn=e.alloc)
 
@@ -630,7 +655,8 @@ class DynamicController:
             if self.journal is not None:
                 self.journal.append("boundary", name, t=t,
                                     result="committed")
-            e.commit()
+            self._pool.commit(name)   # envelope surplus returns to the pool
+            self._notify_capacity()
             if self.trace is not None:
                 self.trace.record(t, "realloc", name, committed=e.alloc)
             return "committed"
@@ -671,7 +697,7 @@ class DynamicController:
         else:
             cand.staged_task = new_task
         fork = self._tables.fork()
-        memo = dict(self._memo)
+        memo = MemoOverlay(self._memo)
         spans = self.trace is not None and getattr(self.trace, "spans", False)
         t0 = time.perf_counter() if spans else 0.0
         with metrics.timed("sched_update_latency_ms"):
@@ -699,7 +725,7 @@ class DynamicController:
         self._pool.adopt(pool)
         self._bounds = bounds
         self._tables.adopt(fork)
-        self._memo = memo
+        memo.flush_into(self._memo)
         self._trim_caches()
         self.epoch += 1
         if self.trace is not None:

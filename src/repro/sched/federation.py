@@ -50,13 +50,35 @@ each task's *active* host (where its jobs run) and any in-flight
 migration.  ``repro.runtime.simulate_fleet`` drives one broker under the
 multi-host discrete-event simulator; ``benchmarks/federation_acceptance.py``
 tracks admit latency versus host count.
+
+**Vectorized placement.**  The built-in policies are scored in one
+batched NumPy sweep over per-host free-slice / speed arrays the broker
+maintains *incrementally* (capacity-change listeners on every host
+controller fire on admit / reclaim / boundary commit — never a
+recomputation over residents), decision-identical to the scalar
+``PLACEMENT_POLICIES`` reference functions, which remain the oracle the
+equivalence tests (``tests/test_scale.py``) compare against.  Callable
+and custom registered policies keep the scalar path.
+
+**Elastic fleets.**  :meth:`CapacityBroker.add_host` joins a host at
+runtime (journaled, immediately placeable); :meth:`CapacityBroker.retire_host`
+is certified migrate-then-retire — every resident is admitted on a new
+host through the normal two-phase migration protocol (target certified
+*before* source release, journaled intent/commit/abort) before the host
+leaves, so scale-in can never drop a deadline.  Host indices are stable
+tombstones: a retired host stays in ``hosts`` (excluded from placement,
+migration targets, and capacity totals) so journal host ids, active-host
+bookkeeping, and simulator lanes never re-index.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import math
 import time
 from typing import Callable, Optional, Sequence, Union
+
+import numpy as np
 
 from repro.core import RTTask, TaskSet
 from repro.obs import metrics
@@ -179,6 +201,9 @@ class CapacityBroker:
                 f"(known: {sorted(PLACEMENT_POLICIES)})"
             )
         self.hosts: tuple[DynamicController, ...] = tuple(hosts)
+        # fleet size at construction: the journal meta pins THIS number —
+        # hosts joined later are replayed from their op="host" records
+        self._n_hosts0 = len(self.hosts)
         # heterogeneous fleets: relative speed class per host (1.0 =
         # reference).  Effective capacity is gn_total * speed — the
         # "weighted" placement and the departure-imbalance heuristic
@@ -214,6 +239,29 @@ class CapacityBroker:
         self._active: dict[str, int] = {}          # name -> active host
         self._migrations: dict[str, Migration] = {}  # in-flight moves
         self.migration_log: list[Migration] = []     # completed moves
+        # Elastic-fleet tombstones: indices are stable for the life of the
+        # broker (journal host ids, simulator lanes, _active values), so a
+        # host never leaves `hosts` — it drains, then moves to _retired.
+        self._draining: set[int] = set()
+        self._retired: set[int] = set()
+        # Incrementally-maintained per-host arrays for vectorized placement
+        # scoring: one capacity-change listener per host keeps _free exact
+        # under ANY mutation path (broker ops or direct controller calls).
+        self._free = np.array([c.free_capacity for c in self.hosts],
+                              dtype=np.int64)
+        self._gn = np.array([c.gn_total for c in self.hosts], dtype=np.int64)
+        self._speed_arr = np.array(self.speeds, dtype=np.float64)
+        self._preemptive_any = any(c.preemption.enabled for c in self.hosts)
+        for h, ctl in enumerate(self.hosts):
+            ctl.add_capacity_listener(self._refresher(h))
+        # recent fleet-admit timestamps for the admissions/sec gauge
+        # (obs-gated: never populated while metrics are disabled)
+        self._admit_times: collections.deque = collections.deque(maxlen=64)
+
+    def _refresher(self, h: int) -> Callable[[], None]:
+        def refresh() -> None:
+            self._free[h] = self.hosts[h].free_capacity
+        return refresh
 
     @classmethod
     def build(
@@ -262,9 +310,11 @@ class CapacityBroker:
         """Broker-level semantic configuration for the journal ``meta``
         table (the per-host configs live under their own scopes).  A
         callable placement journals as ``"custom"`` — recovery then needs
-        the callable re-supplied."""
+        the callable re-supplied.  ``n_hosts`` is the fleet size at broker
+        construction: hosts joined later via :meth:`add_host` are part of
+        the journaled *history* (op="host" records), not the config."""
         return {
-            "n_hosts": len(self.hosts),
+            "n_hosts": self._n_hosts0,
             "placement": (self.placement if isinstance(self.placement, str)
                           else "custom"),
             "migrate_on_departure": self.migrate_on_departure,
@@ -274,10 +324,11 @@ class CapacityBroker:
             "host_speeds": list(self.speeds),
         }
 
-    def restore(self, active: dict, migrations: dict) -> None:
-        """Install recovered fleet bookkeeping (active hosts + in-flight
-        migrations); the per-host ledgers are restored on the host
-        controllers by :mod:`repro.sched.recovery`."""
+    def restore(self, active: dict, migrations: dict,
+                retired: Sequence[int] = ()) -> None:
+        """Install recovered fleet bookkeeping (active hosts, in-flight
+        migrations, retired tombstones); the per-host ledgers are restored
+        on the host controllers by :mod:`repro.sched.recovery`."""
         if self._active or self._migrations:
             raise RuntimeError("restore() requires a fresh broker")
         self._active = {n: int(h) for n, h in active.items()}
@@ -285,12 +336,29 @@ class CapacityBroker:
             n: m if isinstance(m, Migration) else Migration(**m)
             for n, m in migrations.items()
         }
+        self._retired.update(int(h) for h in retired)
 
     # ---- fleet introspection ------------------------------------------------
 
     @property
     def n_hosts(self) -> int:
         return len(self.hosts)
+
+    @property
+    def draining(self) -> frozenset[int]:
+        """Hosts mid scale-in: residents moving out, no new placements."""
+        return frozenset(self._draining)
+
+    @property
+    def retired(self) -> frozenset[int]:
+        """Fully drained tombstones (index kept, capacity withdrawn)."""
+        return frozenset(self._retired)
+
+    @property
+    def active_host_indices(self) -> list[int]:
+        """Hosts eligible for placement, in index order."""
+        inactive = self._draining | self._retired
+        return [h for h in range(len(self.hosts)) if h not in inactive]
 
     @property
     def allocation(self) -> dict[str, int]:
@@ -302,11 +370,34 @@ class CapacityBroker:
 
     @property
     def capacity_in_use(self) -> int:
-        return sum(ctl.capacity_in_use for ctl in self.hosts)
+        return int((self._gn - self._free).sum())
 
     @property
     def free_capacity(self) -> int:
-        return sum(ctl.free_capacity for ctl in self.hosts)
+        """Placeable free slices: draining and retired hosts take no
+        arrivals, so their free slices are not fleet capacity."""
+        inactive = self._draining | self._retired
+        if not inactive:
+            return int(self._free.sum())
+        mask = np.ones(len(self.hosts), dtype=bool)
+        mask[list(inactive)] = False
+        return int(self._free[mask].sum())
+
+    @property
+    def max_arrival_capacity(self) -> int:
+        """Largest GN an arrival's allocation could range over on any
+        single placeable host — the capacity digest
+        :class:`~repro.sched.fleet.BrokerTree` prunes shard descents
+        with.  Free slices under federated dedication; the whole pool
+        under preemptive arbitration (time-shared slices are not bounded
+        by residents' holdings)."""
+        arr = self._gn if self._preemptive_any else self._free
+        inactive = self._draining | self._retired
+        if inactive:
+            mask = np.ones(len(self.hosts), dtype=bool)
+            mask[list(inactive)] = False
+            arr = arr[mask]
+        return int(arr.max()) if arr.size else 0
 
     @property
     def migrating(self) -> dict[str, Migration]:
@@ -359,12 +450,56 @@ class CapacityBroker:
 
     # ---- operations ---------------------------------------------------------
 
-    def _placement_order(self, task: RTTask) -> list[int]:
-        fn = self.placement if callable(self.placement) \
-            else PLACEMENT_POLICIES[self.placement]
-        return list(fn(self, task))
+    #: built-in policies with a vectorized scoring path; the scalar
+    #: ``PLACEMENT_POLICIES`` functions stay the reference oracle
+    #: (decision identity asserted in ``tests/test_scale.py``)
+    _VECTOR_POLICIES = frozenset(
+        ("first_fit", "best_fit", "least_loaded", "weighted"))
 
-    def admit(self, task: RTTask, t: float = 0.0) -> BrokerDecision:
+    def _vector_order(self, policy: str) -> list[int]:
+        """One batched sweep over the incrementally-maintained per-host
+        arrays.  ``np.argsort(kind="stable")`` breaks score ties by host
+        index — exactly the ``(key, h)`` tiebreak of the scalar policies —
+        and the scores are the same IEEE float ops elementwise, so the
+        resulting order is bit-identical to the scalar reference."""
+        free = self._free
+        if policy == "first_fit":
+            idx = np.arange(len(self.hosts))
+        elif policy == "best_fit":
+            idx = np.argsort(free, kind="stable")
+        elif policy == "least_loaded":
+            idx = np.argsort(-free, kind="stable")
+        else:   # weighted
+            idx = np.argsort(-(free * self._speed_arr), kind="stable")
+        inactive = self._draining | self._retired
+        if inactive:
+            mask = np.ones(len(self.hosts), dtype=bool)
+            mask[list(inactive)] = False
+            idx = idx[mask[idx]]
+        return idx.tolist()
+
+    def _placement_order(self, task: Optional[RTTask]) -> list[int]:
+        if not callable(self.placement) \
+                and self.placement in self._VECTOR_POLICIES:
+            order = self._vector_order(self.placement)
+        else:
+            fn = self.placement if callable(self.placement) \
+                else PLACEMENT_POLICIES[self.placement]
+            order = [int(h) for h in fn(self, task)]
+            inactive = self._draining | self._retired
+            if inactive:
+                order = [h for h in order if h not in inactive]
+        metrics.observe("placement_hosts_scanned", len(order),
+                        buckets=metrics.DEFAULT_RESPONSE_BUCKETS)
+        return order
+
+    def admit(
+        self,
+        task: RTTask,
+        t: float = 0.0,
+        allow_realloc: Optional[bool] = None,
+        pinned: bool = True,
+    ) -> BrokerDecision:
         """Offer ``task`` to hosts in placement order; first certifying
         host wins.  Rejected by all → the fleet rejects, every host's
         state untouched (per-host transactionality).
@@ -376,7 +511,14 @@ class CapacityBroker:
         ``realloc_hosts`` most-promising hosts (most free capacity — for
         identical hosts, if re-balancing cannot fit the task there it
         cannot fit anywhere).  This keeps the common fleet admission at
-        O(hosts × pinned) instead of O(hosts × grid search)."""
+        O(hosts × pinned) instead of O(hosts × grid search).
+
+        As on the host controller, the keywords narrow the passes per
+        call (defaults are byte-identical to the historical behavior):
+        ``allow_realloc=False`` runs only the pinned sweep,
+        ``pinned=False`` only the re-allocation pass.
+        :class:`~repro.sched.fleet.BrokerTree` uses them to preserve
+        two-pass admission at every level of the shard hierarchy."""
         name = task.name
         if name and name in self._active:
             return BrokerDecision(
@@ -396,30 +538,33 @@ class CapacityBroker:
             )
         tried: list[int] = []
         last: Optional[SchedDecision] = None
-        for h in order:
-            dec = self.hosts[h].admit(task, t=t, allow_realloc=False)
-            tried.append(h)
-            last = dec
-            if dec.admitted:
-                self._active[name] = h
-                self._count_admit(True, tried)
-                return BrokerDecision(True, h, dec, tuple(tried))
-        realloc_order = [
-            h for h in sorted(
-                order, key=lambda h: (-self.hosts[h].free_capacity, h)
-            )
-            if self.hosts[h].transition == "instant"
-            and self.hosts[h].allow_realloc
-        ][: self.realloc_hosts]
-        for h in realloc_order:
-            # pass 1's pinned rejection was transactional, so repeating the
-            # sweep would fail identically: go straight to the re-balance
-            dec = self.hosts[h].admit(task, t=t, pinned=False)
-            last = dec
-            if dec.admitted:
-                self._active[name] = h
-                self._count_admit(True, tried)
-                return BrokerDecision(True, h, dec, tuple(tried))
+        if pinned:
+            for h in order:
+                dec = self.hosts[h].admit(task, t=t, allow_realloc=False)
+                tried.append(h)
+                last = dec
+                if dec.admitted:
+                    self._active[name] = h
+                    self._count_admit(True, tried)
+                    return BrokerDecision(True, h, dec, tuple(tried))
+        if allow_realloc is not False:
+            realloc_order = [
+                h for h in sorted(
+                    order, key=lambda h: (-self.hosts[h].free_capacity, h)
+                )
+                if self.hosts[h].transition == "instant"
+                and self.hosts[h].allow_realloc
+            ][: self.realloc_hosts]
+            for h in realloc_order:
+                # pass 1's pinned rejection was transactional, so repeating
+                # the sweep would fail identically: go straight to the
+                # re-balance
+                dec = self.hosts[h].admit(task, t=t, pinned=False)
+                last = dec
+                if dec.admitted:
+                    self._active[name] = h
+                    self._count_admit(True, tried)
+                    return BrokerDecision(True, h, dec, tuple(tried))
         reason = (
             f"rejected by all {len(tried)} hosts"
             + (f" (last: {last.reason})" if last is not None else "")
@@ -427,12 +572,22 @@ class CapacityBroker:
         self._count_admit(False, tried)
         return BrokerDecision(False, None, last, tuple(tried), reason=reason)
 
-    @staticmethod
-    def _count_admit(admitted: bool, tried: list) -> None:
+    def _count_admit(self, admitted: bool, tried: list) -> None:
         metrics.inc("fleet_admit_total",
                     result="admitted" if admitted else "rejected")
         metrics.observe("fleet_hosts_tried", len(tried),
                         buckets=metrics.DEFAULT_RESPONSE_BUCKETS)
+        if metrics.enabled():
+            metrics.set_gauge("fleet_residents", len(self._active))
+            if admitted:
+                now = time.perf_counter()
+                self._admit_times.append(now)
+                span = now - self._admit_times[0]
+                if len(self._admit_times) >= 2 and span > 0:
+                    metrics.set_gauge(
+                        "fleet_admissions_per_sec",
+                        (len(self._admit_times) - 1) / span,
+                    )
 
     def release(self, name: str, t: float = 0.0) -> bool:
         """Depart ``name`` from the fleet (release-at-boundary on its
@@ -465,6 +620,9 @@ class CapacityBroker:
             # instant-transition host: reclaimed at once — the departure
             # imbalance (if any) exists now
             del self._active[name]
+            if metrics.enabled():
+                metrics.set_gauge("fleet_residents", len(self._active))
+            self._maybe_finalize_retire(h, t)
             if self.migrate_on_departure:
                 self._rebalance(t)
         return ok
@@ -504,8 +662,12 @@ class CapacityBroker:
         if mig is not None:
             self._active[name] = mig.dst
             self.migration_log.append(mig)
+            self._maybe_finalize_retire(h, t)
             return "migrated"
         del self._active[name]
+        if metrics.enabled():
+            metrics.set_gauge("fleet_residents", len(self._active))
+        self._maybe_finalize_retire(h, t)
         if self.migrate_on_departure:
             self._rebalance(t)
         return "reclaimed"
@@ -540,18 +702,90 @@ class CapacityBroker:
             key=lambda e: (e.gn_hi, e.task.name),
         )
 
+    def _loads(self) -> np.ndarray:
+        """Per-host envelope load fractions in one vectorized read —
+        elementwise the same IEEE ops as :meth:`load`, so argmax/argmin
+        picks (first max / first min) match the scalar loop exactly."""
+        return (self._gn - self._free) / (self._gn * self._speed_arr)
+
+    def _begin_migration(self, e, src: int, dst: int, t: float) -> bool:
+        """Certified two-phase move of entry ``e`` from ``src`` to ``dst``.
+
+        The target host admits through normal transitional-envelope
+        certification BEFORE the source releases; with a journal attached
+        the move is the durable intent/commit/abort transaction.  Returns
+        False (state untouched beyond the journaled abort) when the
+        target rejects."""
+        name = e.task.name
+        src_ctl, dst_ctl = self.hosts[src], self.hosts[dst]
+        spans = (self.trace is not None
+                 and getattr(self.trace, "spans", False))
+        t0 = time.perf_counter() if spans else 0.0
+        if self.journal is not None:
+            # two-phase: the intent is durable before the target host
+            # certifies.  Recovery resolves a crash inside the window
+            # deterministically — forward iff the target's admit
+            # record committed, back otherwise.
+            self.journal.append("migrate", name, t=t, phase="intent",
+                                src=src, dst=dst)
+        dec = dst_ctl.admit(e.task, t=t)   # envelope-certified, or skip
+        if spans:
+            self.trace.span(
+                t, "migrate", (time.perf_counter() - t0) * 1e3,
+                target=name, src=src, dst=dst, hit=dec.admitted,
+            )
+        if not dec.admitted:
+            if self.journal is not None:
+                self.journal.append("migrate", name, t=t, phase="abort",
+                                    src=src, dst=dst,
+                                    reason="target rejected")
+            return False
+        src_ctl.release(name, t=t)         # release-at-boundary
+        if self.journal is not None:
+            self.journal.append("migrate", name, t=t, phase="commit",
+                                src=src, dst=dst,
+                                completed=name not in src_ctl.pool)
+        metrics.inc("fleet_migrations_total")
+        mig = Migration(name=name, src=src, dst=dst, started=t)
+        if self.trace is not None:
+            extra = {}
+            if metrics.enabled() and dec.bounds:
+                # obs-gated: certified R̂ on the target, so the report
+                # CLI tracks bounds across moves from the trace alone
+                extra = {"bound": round(dec.bounds.get(name,
+                                                       math.inf), 6)}
+            self.trace.record(t, "migrate", name, src=src, dst=dst,
+                              gn=dec.alloc[name] if dec.alloc else None,
+                              host=src, **extra)
+        if name not in src_ctl.pool:
+            # instant-transition source: reclaimed at once — the
+            # migration completes immediately
+            self._active[name] = dst
+            self.migration_log.append(mig)
+        else:
+            self._migrations[name] = mig
+        return True
+
     def _start_one_migration(self, t: float) -> bool:
         n = len(self.hosts)
         if n < 2:
             return False
-        loads = [self.load(h) for h in range(n)]
-        src = max(range(n), key=lambda h: loads[h])
-        dst = min(range(n), key=lambda h: loads[h])
+        loads = self._loads()
+        # a draining/retired host must not receive migrations; masking the
+        # argmin (rather than filtering) keeps indices stable
+        inactive = self._draining | self._retired
+        dst_loads = loads
+        if inactive:
+            if n - len(inactive) < 1:
+                return False
+            dst_loads = loads.copy()
+            dst_loads[list(inactive)] = np.inf
+        src = int(np.argmax(loads))
+        dst = int(np.argmin(dst_loads))
         if src == dst or loads[src] - loads[dst] <= self.imbalance_threshold:
             return False
         src_ctl, dst_ctl = self.hosts[src], self.hosts[dst]
         for e in self._migration_candidates(src):
-            name = e.task.name
             # a move that would just flip the imbalance is no move at all
             # (gains/costs in effective-capacity units, like load())
             gain = e.gn_hi / (src_ctl.gn_total * self.speeds[src])
@@ -559,51 +793,135 @@ class CapacityBroker:
             if loads[src] - gain < loads[dst] + cost \
                     - self.imbalance_threshold:
                 continue
-            spans = (self.trace is not None
-                     and getattr(self.trace, "spans", False))
-            t0 = time.perf_counter() if spans else 0.0
-            if self.journal is not None:
-                # two-phase: the intent is durable before the target host
-                # certifies.  Recovery resolves a crash inside the window
-                # deterministically — forward iff the target's admit
-                # record committed, back otherwise.
-                self.journal.append("migrate", name, t=t, phase="intent",
-                                    src=src, dst=dst)
-            dec = dst_ctl.admit(e.task, t=t)   # envelope-certified, or skip
-            if spans:
-                self.trace.span(
-                    t, "migrate", (time.perf_counter() - t0) * 1e3,
-                    target=name, src=src, dst=dst, hit=dec.admitted,
-                )
-            if not dec.admitted:
-                if self.journal is not None:
-                    self.journal.append("migrate", name, t=t, phase="abort",
-                                        src=src, dst=dst,
-                                        reason="target rejected")
-                continue
-            src_ctl.release(name, t=t)         # release-at-boundary
-            if self.journal is not None:
-                self.journal.append("migrate", name, t=t, phase="commit",
-                                    src=src, dst=dst,
-                                    completed=name not in src_ctl.pool)
-            metrics.inc("fleet_migrations_total")
-            mig = Migration(name=name, src=src, dst=dst, started=t)
-            if self.trace is not None:
-                extra = {}
-                if metrics.enabled() and dec.bounds:
-                    # obs-gated: certified R̂ on the target, so the report
-                    # CLI tracks bounds across moves from the trace alone
-                    extra = {"bound": round(dec.bounds.get(name,
-                                                           math.inf), 6)}
-                self.trace.record(t, "migrate", name, src=src, dst=dst,
-                                  gn=dec.alloc[name] if dec.alloc else None,
-                                  host=src, **extra)
-            if name not in src_ctl.pool:
-                # instant-transition source: reclaimed at once — the
-                # migration completes immediately
-                self._active[name] = dst
-                self.migration_log.append(mig)
-            else:
-                self._migrations[name] = mig
-            return True
+            if self._begin_migration(e, src, dst, t):
+                return True
         return False
+
+    # ---- elastic fleets ------------------------------------------------------
+
+    def add_host(
+        self,
+        controller: Optional[DynamicController] = None,
+        *,
+        gn_total: Optional[int] = None,
+        speed: float = 1.0,
+        t: float = 0.0,
+        _record: bool = True,
+    ) -> int:
+        """Join a host to the fleet at runtime; returns its (stable) index.
+
+        Without an explicit ``controller`` the new host mirrors host 0's
+        semantic configuration (transition mode, engine, preemption model,
+        realloc policy) at ``gn_total`` slices (default: same as host 0),
+        wired into the broker's trace and journal exactly as
+        :meth:`build` would have.  The host starts empty and is
+        immediately eligible for placement and as a migration target —
+        the discrete-event simulator picks up its resource lanes on the
+        next step.  With a journal attached the join is recorded
+        (op="host", phase="add") so recovery rebuilds the grown fleet."""
+        if float(speed) <= 0.0:
+            raise ValueError("host speeds must be positive")
+        h = len(self.hosts)
+        if controller is None:
+            ref = self.hosts[0]
+            controller = DynamicController(
+                int(gn_total) if gn_total is not None else ref.gn_total,
+                tightened=ref.tightened,
+                transition=ref.transition,
+                allow_realloc=ref.allow_realloc,
+                max_candidates=ref.max_candidates,
+                trace=(self.trace.for_host(h)
+                       if self.trace is not None else None),
+                engine=ref.engine,
+                preemption=ref.preemption,
+                gpu_ctx_overhead=ref.preemption.ctx,
+                journal=(self.journal.for_host(h)
+                         if self.journal is not None else None),
+            )
+        elif gn_total is not None:
+            raise ValueError("pass gn_total or a controller, not both")
+        self.hosts = self.hosts + (controller,)
+        self.speeds = self.speeds + (float(speed),)
+        self._free = np.append(self._free, controller.free_capacity)
+        self._gn = np.append(self._gn, controller.gn_total)
+        self._speed_arr = np.append(self._speed_arr, float(speed))
+        self._preemptive_any |= controller.preemption.enabled
+        controller.add_capacity_listener(self._refresher(h))
+        if self.journal is not None and _record:
+            self.journal.append("host", "", t=t, phase="add", host=h,
+                                gn_total=controller.gn_total,
+                                speed=float(speed))
+        if self.trace is not None:
+            self.trace.record(t, "host_add", f"host{h}", host=h,
+                              gn=controller.gn_total)
+        metrics.inc("fleet_hosts_added_total")
+        return h
+
+    def retire_host(self, h: int, t: float = 0.0) -> bool:
+        """Scale-in: certified migrate-then-retire of host ``h``.
+
+        Every movable resident is re-placed through the normal two-phase
+        migration (:meth:`_begin_migration`: target certified before
+        source release, journaled when a journal is attached), so no
+        resident ever drops a deadline during scale-in.  Returns True
+        when the drain is fully underway — the host is excluded from
+        placement at once and retires (op="host", phase="retire"
+        journaled) as soon as its last boundary reclaims; instant-
+        transition hosts retire before this call returns.
+
+        Returns False, leaving the host active, when the drain cannot
+        complete: some resident found no certifying target, a resident is
+        mid rate-change (its envelope cannot be re-certified elsewhere),
+        a migration into ``h`` is in flight, or ``h`` is the last active
+        host.  Moves already started stand — each was individually
+        certified, so they are safe load-shedding either way."""
+        if not 0 <= h < len(self.hosts):
+            raise IndexError(f"no host {h}")
+        if h in self._retired or h in self._draining:
+            return False
+        if len(self.active_host_indices) < 2:
+            return False   # never drain the last active host
+        if any(m.dst == h for m in self._migrations.values()):
+            # an in-flight move is parking its target copy on h; retiring
+            # under it would orphan that copy — retry after its boundary
+            return False
+        ctl = self.hosts[h]
+        # exclusion first: placement orders computed below must not pick h
+        self._draining.add(h)
+        moved_all = True
+        for e in list(self._migration_candidates(h)):
+            placed = False
+            for dst in self._placement_order(e.task):
+                if self._begin_migration(e, h, dst, t):
+                    placed = True
+                    break
+            if not placed:
+                moved_all = False
+                break
+        # stagers mid rate-change are not migration candidates: their
+        # transitional envelope spans two parameter sets and cannot be
+        # re-admitted elsewhere — the drain must wait for their boundary
+        if any(e.in_transition and not e.departing
+               for e in ctl.pool.entries()):
+            moved_all = False
+        if not moved_all:
+            self._draining.discard(h)
+            return False
+        if self.trace is not None:
+            self.trace.record(t, "host_drain", f"host{h}", host=h,
+                              residents=len(ctl.pool))
+        self._maybe_finalize_retire(h, t)
+        return True
+
+    def _maybe_finalize_retire(self, h: int, t: float) -> None:
+        """Complete a drain once the host's ledger is empty: the tombstone
+        moves from draining to retired (durably, when journaled)."""
+        if h not in self._draining or len(self.hosts[h].pool):
+            return
+        self._draining.discard(h)
+        self._retired.add(h)
+        if self.journal is not None:
+            self.journal.append("host", "", t=t, phase="retire", host=h)
+        if self.trace is not None:
+            self.trace.record(t, "host_retire", f"host{h}", host=h)
+        metrics.inc("fleet_hosts_retired_total")

@@ -124,6 +124,10 @@ class LedgerState:
     from_snapshot: bool                    # started from a checkpoint
     rolled_forward: list[str]              # dangling migrations completed
     rolled_back: list[str]                 # dangling intents dropped
+    #: elastic-fleet history, journal order: {"phase": "add", "host",
+    #: "gn_total", "speed"} joins and {"phase": "retire", "host"}
+    #: tombstones — recover_broker re-applies them to rebuild fleet shape
+    fleet_ops: list[dict] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -158,7 +162,7 @@ class RecoveryReport:
 
 # ---- replay ------------------------------------------------------------------
 
-def _decode_snapshot(state: dict) -> tuple[dict, dict, dict]:
+def _decode_snapshot(state: dict) -> tuple[dict, dict, dict, list]:
     if state.get("format") != FORMAT:
         raise ValueError(
             f"snapshot format {state.get('format')!r} != {FORMAT}"
@@ -176,7 +180,8 @@ def _decode_snapshot(state: dict) -> tuple[dict, dict, dict]:
     migrations = {
         n: Migration(**m) for n, m in state.get("migrations", {}).items()
     }
-    return hosts, active, migrations
+    fleet_ops = [dict(op) for op in state.get("fleet_ops", [])]
+    return hosts, active, migrations, fleet_ops
 
 
 def replay(journal: Journal, up_to: Optional[int] = None) -> LedgerState:
@@ -195,6 +200,7 @@ def replay(journal: Journal, up_to: Optional[int] = None) -> LedgerState:
     hosts: dict[int, HostState] = {}
     active: dict[str, int] = {}
     migrations: dict[str, Migration] = {}
+    fleet_ops: list[dict] = []
     from_snapshot = False
     snap = journal.snapshot()
     if snap is not None:
@@ -204,7 +210,7 @@ def replay(journal: Journal, up_to: Optional[int] = None) -> LedgerState:
                 f"cannot replay up_to={up_to}: records <= {seq0} were "
                 f"compacted into the snapshot"
             )
-        hosts, active, migrations = _decode_snapshot(state)
+        hosts, active, migrations, fleet_ops = _decode_snapshot(state)
         from_snapshot = True
 
     def host_state(h: int) -> HostState:
@@ -306,6 +312,23 @@ def replay(journal: Journal, up_to: Optional[int] = None) -> LedgerState:
                         name=name, src=int(p["src"]), dst=int(p["dst"]),
                         started=rec.t,
                     )
+        elif rec.op == "host":
+            # elastic fleet shape: atomic single-record ops (a drain's
+            # individual moves are ordinary migrate transactions; the
+            # retire record lands only once the host is empty)
+            if rec.phase == "add":
+                fleet_ops.append({
+                    "phase": "add", "host": h,
+                    "gn_total": int(p["gn_total"]),
+                    "speed": float(p["speed"]),
+                })
+                host_state(h)   # the joined host exists from here on
+            elif rec.phase == "retire":
+                fleet_ops.append({"phase": "retire", "host": h})
+            else:
+                raise ValueError(
+                    f"unknown host phase {rec.phase!r} (seq {rec.seq})"
+                )
         else:
             raise ValueError(f"unknown journal op {rec.op!r} (seq {rec.seq})")
 
@@ -343,6 +366,7 @@ def replay(journal: Journal, up_to: Optional[int] = None) -> LedgerState:
         hosts=hosts, active=active, migrations=migrations,
         replayed=len(records), from_snapshot=from_snapshot,
         rolled_forward=rolled_forward, rolled_back=rolled_back,
+        fleet_ops=fleet_ops,
     )
 
 
@@ -502,10 +526,26 @@ def recover_broker(
         realloc_hosts=bcfg["realloc_hosts"],
         host_speeds=bcfg["host_speeds"],
     )
+    # elastic history first: hosts joined after construction must exist
+    # before their ledgers are restored (ids are sequential by protocol)
+    for op in report.state.fleet_ops:
+        if op["phase"] != "add":
+            continue
+        if op["host"] != broker.n_hosts:
+            raise ValueError(
+                f"journaled host add out of order: host {op['host']} "
+                f"joined a {broker.n_hosts}-host fleet"
+            )
+        broker.add_host(gn_total=op["gn_total"], speed=op["speed"],
+                        _record=False)
     for h, st in sorted(report.state.hosts.items()):
         # restore even entry-less hosts: their epoch counter must survive
         broker.hosts[h].restore(st.entries.values(), st.bounds, st.epoch)
-    broker.restore(report.state.active, report.state.migrations)
+    broker.restore(
+        report.state.active, report.state.migrations,
+        retired=[op["host"] for op in report.state.fleet_ops
+                 if op["phase"] == "retire"],
+    )
     return broker, report
 
 
@@ -526,7 +566,14 @@ def serialize_state(
     recoverable state of a controller or broker, JSON-native (floats
     round-trip bit-exactly)."""
     if isinstance(obj, CapacityBroker):
-        return {
+        # fleet shape beyond the construction-time n_hosts (journal meta)
+        # plus retired tombstones, re-applied by recover_broker in order
+        fleet_ops = [
+            {"phase": "add", "host": h, "gn_total": obj.hosts[h].gn_total,
+             "speed": obj.speeds[h]}
+            for h in range(obj._n_hosts0, len(obj.hosts))
+        ] + [{"phase": "retire", "host": h} for h in sorted(obj.retired)]
+        doc = {
             "format": FORMAT,
             "hosts": {str(h): _host_doc(ctl)
                       for h, ctl in enumerate(obj.hosts)},
@@ -534,6 +581,11 @@ def serialize_state(
             "migrations": {n: dataclasses.asdict(m)
                            for n, m in sorted(obj.migrating.items())},
         }
+        if fleet_ops:
+            # only elastic fleets grow the snapshot schema — static-fleet
+            # snapshots stay byte-identical to the previous format
+            doc["fleet_ops"] = fleet_ops
+        return doc
     return {
         "format": FORMAT,
         "hosts": {"0": _host_doc(obj)},
