@@ -1,0 +1,307 @@
+"""Discrete-event engine throughput benchmark -> BENCH_engine.json.
+
+The admission path scales to 1e5 residents (BENCH_scale.json); this
+benchmark gates that the *execution* engine keeps up — the indexed event
+loop (dirty-group re-arbitration + incremental priority order + per-group
+time advance) against the scan-everything reference loop it replaced,
+on the workload where the gap is widest: broker-routed fleet churn.
+
+  gate          events/sec, indexed vs reference, on 1e3-resident fleet
+                churn (admissions absorbed untimed, then a timed steady
+                window with live churn).  The two loops are bit-identical
+                so their step counts must agree exactly.
+  equivalence   a traced 1e2-resident run through both loops, asserting
+                identical event lists (the scaled-down twin of the golden
+                corpus + hypothesis suite under tests/).
+  seg_probe     the cached segment-kind micro-fix, profile-verified: the
+                reference loop probes ``seg_kind`` at most once per member
+                per step, the indexed loop not at all in steady state.
+  wall          ``simulate_fleet`` end-to-end wall-clock at 1e2 / 1e3 /
+                1e4 residents through the default (indexed) engine.
+
+Acceptance gates (asserted, not just reported):
+
+  * indexed events/sec >= 5x reference at 1e3 residents;
+  * identical step counts and identical traces across the loops;
+  * reference seg_kind probes <= 1 per member per step, indexed == 0.
+
+  PYTHONPATH=src python benchmarks/engine_throughput.py \\
+      [--out BENCH_engine.json]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.generator import ChurnEvent
+from repro.runtime import simulate_fleet
+from repro.runtime.engine import DiscreteEventEngine
+from repro.runtime.simulator import _FleetChurnPolicy
+from repro.sched import CapacityBroker, EventTrace
+
+try:
+    from benchmarks.scale_acceptance import (
+        GN_PER_HOST,
+        _mean_alloc,
+        _task_pool,
+    )
+    from benchmarks._envelope import envelope, write_bench
+except ImportError:                      # run as a script from benchmarks/
+    from scale_acceptance import GN_PER_HOST, _mean_alloc, _task_pool
+    from _envelope import envelope, write_bench
+
+GATE_LEVEL = 1_000
+GATE_RATIO = 5.0
+WALL_LEVELS = (100, 1_000, 10_000)
+
+#: benchmark timeline (model time): admits spread over the admit window,
+#: ~12% of residents churn (release + re-admit) until the run horizon,
+#: the throughput gate times only [WARM, HORIZON)
+ADMIT_WINDOW = 400.0
+WARM_HORIZON = 500.0
+RUN_HORIZON = 800.0
+
+
+def _fleet_events(level: int, pool, seed: int = 7) -> list[ChurnEvent]:
+    """Admit ``level`` pool-cycled services over the admit window, then
+    keep membership churning (release + later re-admit of ~1/8 of the
+    fleet) so the timed window exercises the membership-invalidation
+    paths, not just steady arbitration."""
+    rng = np.random.default_rng(seed)
+    events = []
+    for i in range(level):
+        t = dataclasses.replace(pool[i % len(pool)], name=f"svc{i}")
+        events.append(ChurnEvent(
+            time=round(ADMIT_WINDOW * i / level, 6), kind="admit",
+            name=t.name, task=t,
+        ))
+    victims = rng.choice(level, size=max(1, level // 8), replace=False)
+    for v in sorted(int(x) for x in victims):
+        t_rel = float(rng.uniform(ADMIT_WINDOW, RUN_HORIZON - 100.0))
+        events.append(ChurnEvent(time=t_rel, kind="release", name=f"svc{v}"))
+        events.append(ChurnEvent(
+            time=t_rel + 80.0, kind="admit", name=f"svc{v}",
+            task=dataclasses.replace(pool[v % len(pool)], name=f"svc{v}"),
+        ))
+    events.sort(key=lambda e: (e.time, e.name))
+    return events
+
+
+def _n_hosts(level: int, g_mean: float) -> int:
+    """30% headroom so every admission (and re-admission) succeeds."""
+    return int(np.ceil(level * g_mean / GN_PER_HOST * 1.3))
+
+
+def _build_engine(level, events, g_mean, variant, trace=None):
+    broker = CapacityBroker.build(
+        _n_hosts(level, g_mean), GN_PER_HOST,
+        transition="boundary", engine="batch", trace=trace,
+    )
+    policy = _FleetChurnPolicy(
+        events, broker, np.random.default_rng(11),
+        release_jitter=True, worst_case=False,
+    )
+    return DiscreteEventEngine(policy, trace=trace, variant=variant)
+
+
+def bench_gate(level: int, pool, g_mean: float) -> dict:
+    """events/sec through both loops on identical fleet churn.
+
+    The warm run (admissions + early churn) is untimed so the gate
+    measures steady event processing, not broker admission cost; the
+    timed window is a *continuation* of the same engine, with churn
+    still arriving."""
+    events = _fleet_events(level, pool)
+    out = {}
+    for variant in ("reference", "indexed"):
+        eng = _build_engine(level, events, g_mean, variant)
+        eng.run(WARM_HORIZON)
+        warm_steps = eng.steps
+        t0 = time.perf_counter()
+        eng.run(RUN_HORIZON)
+        wall = time.perf_counter() - t0
+        steps = eng.steps - warm_steps
+        out[variant] = {
+            "steps": steps,
+            "wall_s": round(wall, 3),
+            "events_per_sec": round(steps / wall, 1),
+        }
+    assert out["reference"]["steps"] == out["indexed"]["steps"], (
+        f"loops took different step sequences: "
+        f"{out['reference']['steps']} vs {out['indexed']['steps']} — "
+        f"run tests/test_engine_indexed.py for the first divergent event"
+    )
+    ratio = out["indexed"]["events_per_sec"] / out["reference"]["events_per_sec"]
+    out["speedup"] = round(ratio, 2)
+    out["residents"] = level
+    out["hosts"] = _n_hosts(level, g_mean)
+    return out
+
+
+def bench_equivalence(pool, g_mean: float, level: int = 100) -> dict:
+    """Traced scaled-down twin of the gate workload: both loops must emit
+    the byte-identical event list."""
+    events = _fleet_events(level, pool)
+    traces = {}
+    for variant in ("reference", "indexed"):
+        tr = EventTrace()
+        _build_engine(level, events, g_mean, variant, trace=tr).run(
+            RUN_HORIZON
+        )
+        traces[variant] = tr.events
+    identical = traces["reference"] == traces["indexed"]
+    return {
+        "residents": level,
+        "events": len(traces["indexed"]),
+        "identical": identical,
+    }
+
+
+def bench_seg_probe(pool, g_mean: float, level: int = 100) -> dict:
+    """Verify the cached segment-kind probe (one per member per step on
+    the reference loop — down from one per owner scan — and none at all
+    in the indexed loop's steady state, which tracks kinds incrementally)."""
+    out = {}
+    for variant in ("reference", "indexed"):
+        eng = _build_engine(level, _fleet_events(level, pool), g_mean,
+                            variant)
+        calls = 0
+        orig = eng.seg_kind
+
+        def counting(key, _orig=orig):
+            nonlocal calls
+            calls += 1
+            return _orig(key)
+
+        eng.seg_kind = counting
+        eng.run(RUN_HORIZON)
+        out[variant] = {
+            "seg_kind_calls": calls,
+            "steps": eng.steps,
+            "calls_per_step": round(calls / eng.steps, 2),
+        }
+    return out
+
+
+def bench_wall(level: int, pool, g_mean: float) -> dict:
+    """End-to-end ``simulate_fleet`` wall-clock through the default
+    (indexed) engine: admissions spread over the admit window plus a
+    steady tail, sized so the 1e4 level stays inside a CI budget."""
+    events = [
+        ChurnEvent(
+            time=round(ADMIT_WINDOW * i / level, 6), kind="admit",
+            name=f"svc{i}",
+            task=dataclasses.replace(pool[i % len(pool)], name=f"svc{i}"),
+        )
+        for i in range(level)
+    ]
+    n_hosts = _n_hosts(level, g_mean)
+    t0 = time.perf_counter()
+    res = simulate_fleet(
+        events, n_hosts, GN_PER_HOST, horizon=ADMIT_WINDOW + 100.0,
+        seed=1,
+    )
+    wall = time.perf_counter() - t0
+    assert len(res.admitted) == level, (
+        f"{len(res.admitted)}/{level} admitted — fleet under-provisioned"
+    )
+    return {
+        "residents": level,
+        "hosts": n_hosts,
+        "jobs_completed": sum(res.jobs.values()),
+        "wall_s": round(wall, 2),
+    }
+
+
+def run(rows: list | None = None, out: str = "BENCH_engine.json",
+        full: bool = False) -> dict:
+    rows = rows if rows is not None else []
+    pool = _task_pool(seed=5)
+    g_mean = _mean_alloc(pool)
+
+    gate = bench_gate(GATE_LEVEL, pool, g_mean)
+    equivalence = bench_equivalence(pool, g_mean)
+    seg_probe = bench_seg_probe(pool, g_mean)
+    wall = {str(lv): bench_wall(lv, pool, g_mean) for lv in WALL_LEVELS}
+
+    result = envelope(
+        "engine",
+        config={
+            "gn_per_host": GN_PER_HOST,
+            "gate_level": GATE_LEVEL,
+            "gate_ratio": GATE_RATIO,
+            "wall_levels": list(WALL_LEVELS),
+            "mean_alloc": g_mean,
+            "admit_window": ADMIT_WINDOW,
+            "warm_horizon": WARM_HORIZON,
+            "run_horizon": RUN_HORIZON,
+        },
+        gate=gate,
+        equivalence=equivalence,
+        seg_probe=seg_probe,
+        wall=wall,
+    )
+
+    # the acceptance criteria this benchmark exists to track
+    assert gate["speedup"] >= GATE_RATIO, (
+        f"indexed engine only {gate['speedup']}x the reference loop at "
+        f"{GATE_LEVEL} residents (gate {GATE_RATIO}x): "
+        f"{gate['indexed']['events_per_sec']} vs "
+        f"{gate['reference']['events_per_sec']} events/s"
+    )
+    assert equivalence["identical"], (
+        "reference and indexed traces diverged on the benchmark workload "
+        "— run tests/test_engine_indexed.py for the first divergent event"
+    )
+    ref_members = equivalence["residents"]
+    assert seg_probe["reference"]["calls_per_step"] <= ref_members, (
+        "reference loop probes seg_kind more than once per member per "
+        f"step: {seg_probe['reference']['calls_per_step']} calls/step"
+    )
+    assert seg_probe["indexed"]["seg_kind_calls"] == 0, (
+        f"indexed loop fell back to {seg_probe['indexed']['seg_kind_calls']} "
+        "seg_kind probes — the incremental kind cache is not being used"
+    )
+
+    write_bench(out, result)
+    rows.append(("engine,events_per_sec_indexed",
+                 gate["indexed"]["events_per_sec"]))
+    rows.append(("engine,events_per_sec_reference",
+                 gate["reference"]["events_per_sec"]))
+    rows.append(("engine,speedup", gate["speedup"]))
+    for lv in WALL_LEVELS:
+        rows.append((f"engine,fleet_wall_s_{lv}", wall[str(lv)]["wall_s"]))
+    return result
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="BENCH_engine.json")
+    args = ap.parse_args()
+    r = run(out=args.out)
+    g = r["gate"]
+    print(f"gate ({g['residents']} residents, {g['hosts']} hosts): "
+          f"indexed {g['indexed']['events_per_sec']} ev/s vs reference "
+          f"{g['reference']['events_per_sec']} ev/s -> {g['speedup']}x "
+          f"(gate {GATE_RATIO}x, {g['indexed']['steps']} steps)")
+    eq = r["equivalence"]
+    print(f"equivalence ({eq['residents']} residents): "
+          f"{eq['events']} events, identical={eq['identical']}")
+    sp = r["seg_probe"]
+    print(f"seg_kind probes/step: reference "
+          f"{sp['reference']['calls_per_step']}, indexed "
+          f"{sp['indexed']['calls_per_step']}")
+    for lv, w in r["wall"].items():
+        print(f"simulate_fleet {lv}: {w['wall_s']} s "
+              f"({w['hosts']} hosts, {w['jobs_completed']} jobs)")
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main())

@@ -16,7 +16,7 @@ import time
 #: is an error up front, not a silently empty run
 STAGES = (
     "fig4", "fig6", "fig8", "fig9", "fig10", "fig11", "fig12",
-    "churn", "rta", "federation", "scale", "preemption", "obs",
+    "churn", "rta", "federation", "scale", "engine", "preemption", "obs",
     "recovery", "roofline", "roofline_multipod",
 )
 
@@ -49,6 +49,7 @@ def main(argv=None) -> int:
 
     from benchmarks import (
         churn_acceptance,
+        engine_throughput,
         federation_acceptance,
         fig4_kernel_scaling,
         fig6_interleave,
@@ -74,6 +75,8 @@ def main(argv=None) -> int:
     stage("federation", federation_acceptance.run, rows)
     # --full adds the 1e5-resident level (minutes); default tops at 1e4
     stage("scale", scale_acceptance.run, rows, full=args.full)
+    # indexed-vs-reference events/sec gate + simulate_fleet wall report
+    stage("engine", engine_throughput.run, rows)
     stage("preemption", preemption_acceptance.run, rows)
     stage("obs", obs_overhead.run, rows)
     # the paper-scale acceptance figure is a 100-resident pool; the

@@ -89,6 +89,14 @@ Metric name → emitting layer
   engine_gpu_preemptions_total counter    preemptive-GPU kernel evictions
   engine_gpu_ctx_charged_total counter    context-switch time charged to
                                           evicted kernels (model clock)
+  engine_steps_total           counter    event steps executed (either
+                                          loop variant; the events/sec
+                                          numerator in BENCH_engine.json)
+  engine_step_width            histogram  model-time width per step — a
+                                          mass at 0 exposes same-timestamp
+                                          cascades (the livelock guard's
+                                          territory), a heavy tail means
+                                          idle horizons
 
 ``obs/monitor.py`` (:class:`BoundMonitor`):
 

@@ -42,6 +42,7 @@ __all__ = [
     "NullRegistry",
     "DEFAULT_LATENCY_BUCKETS_MS",
     "DEFAULT_RESPONSE_BUCKETS",
+    "DEFAULT_STEP_WIDTH_BUCKETS",
     "registry",
     "enabled",
     "enable",
@@ -63,6 +64,14 @@ DEFAULT_LATENCY_BUCKETS_MS = (
 #: model-time observed responses / widths / counts (dimensionless edges)
 DEFAULT_RESPONSE_BUCKETS = (
     1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0, 200.0, 500.0, 1000.0,
+)
+
+#: engine event-step widths (model time): most steps are sub-period
+#: slivers between releases/completions, so the edges lean small — a
+#: mass at 0 exposes same-timestamp cascades (see the engine's livelock
+#: guard), a heavy tail means idle horizons
+DEFAULT_STEP_WIDTH_BUCKETS = (
+    0.01, 0.05, 0.1, 0.5, 1.0, 2.0, 5.0, 10.0, 25.0, 50.0, 100.0,
 )
 
 

@@ -42,6 +42,7 @@ behavior event by event.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import math
 from typing import Optional, Sequence
 
@@ -103,7 +104,14 @@ class _FixedTaskSetPolicy(SchedulingPolicy):
     """Frozen membership: every task is resident for the whole run.
 
     Priority = taskset order (0 highest).  Sporadic releases: period T_i
-    plus optional random inter-arrival slack (sporadic ≥ T)."""
+    plus optional random inter-arrival slack (sporadic ≥ T).
+
+    Incremental seam: membership is static (one shared group, priority =
+    index order), so the only indexed structure is a release heap —
+    entries are ``(release_time, task_index)``, lazily invalidated by
+    comparing against ``self.releases`` (the single source of truth)."""
+
+    incremental = True
 
     def __init__(
         self,
@@ -135,22 +143,53 @@ class _FixedTaskSetPolicy(SchedulingPolicy):
     def bind(self, engine: DiscreteEventEngine) -> None:
         super().bind(engine)
         engine.jobs = {i: None for i in range(len(self.taskset))}
+        self._release_heap = [
+            (self.releases[i], i) for i in range(len(self.taskset))
+        ]
+        heapq.heapify(self._release_heap)
+
+    def _release_one(self, i: int) -> None:
+        t = self.taskset[i]
+        self.engine.start_job(i, EngineJob(
+            release=self.releases[i],
+            deadline_abs=self.releases[i] + t.deadline,
+            chain=self.chains[i],
+            durations=_sample_durations(
+                t, 2 * self.alloc[i], self.rng, self.worst_case
+            ),
+        ))
 
     def release_jobs(self, now: float) -> None:
         eng = self.engine
-        for i, t in enumerate(self.taskset):
+        for i in range(len(self.taskset)):
             if eng.jobs[i] is None and self.releases[i] <= now + _EPS:
-                eng.start_job(i, EngineJob(
-                    release=self.releases[i],
-                    deadline_abs=self.releases[i] + t.deadline,
-                    chain=self.chains[i],
-                    durations=_sample_durations(
-                        t, 2 * self.alloc[i], self.rng, self.worst_case
-                    ),
-                ))
+                self._release_one(i)
+
+    def release_jobs_fast(self, now: float) -> None:
+        # pop every due entry, drop the stale ones (an entry is live iff
+        # it matches self.releases and the task is idle), then release in
+        # index order — the same order the scan-based path produces, so
+        # the RNG draw sequence is identical
+        eng = self.engine
+        heap = self._release_heap
+        due = []
+        while heap and heap[0][0] <= now + _EPS:
+            t, i = heapq.heappop(heap)
+            if self.releases[i] == t and eng.jobs[i] is None:
+                due.append(i)
+        due.sort()
+        for i in due:
+            self._release_one(i)
 
     def arbitration_order(self) -> list:
         return list(range(len(self.taskset)))
+
+    def resource_groups(self) -> list:
+        return [None]
+
+    def sort_group(self, group, keys: list) -> list:
+        keys.sort()
+        return keys
 
     def next_external_time(self, now: float) -> float:
         return min(
@@ -158,6 +197,15 @@ class _FixedTaskSetPolicy(SchedulingPolicy):
              if self.engine.jobs[i] is None),
             default=math.inf,
         )
+
+    def next_external_time_fast(self, now: float) -> float:
+        heap = self._release_heap
+        while heap:
+            t, i = heap[0]
+            if self.releases[i] == t and self.engine.jobs[i] is None:
+                return t
+            heapq.heappop(heap)
+        return math.inf
 
     def on_job_complete(self, key, job, now, response) -> None:
         eng = self.engine
@@ -175,6 +223,7 @@ class _FixedTaskSetPolicy(SchedulingPolicy):
         )
         self.releases[key] = max(job.release + task.period + gap, now)
         eng.jobs[key] = None
+        heapq.heappush(self._release_heap, (self.releases[key], key))
 
     def display_name(self, key) -> str:
         return self.names[key]
@@ -193,19 +242,25 @@ def simulate(
     trace: Optional[EventTrace] = None,
     preemption: str = "none",
     gpu_ctx_overhead: float = 0.0,
+    engine_variant: Optional[str] = None,
 ) -> SimResult:
     """Run the RT executor for ``horizon`` time units.
 
     ``preemption`` selects the accelerator arbitration: ``"none"`` (the
     federated default — dedicated lanes, byte-identical to the seed
     behavior) or ``"priority"`` (preemptive priority-driven GPU context,
-    ``gpu_ctx_overhead`` charged per preemption)."""
+    ``gpu_ctx_overhead`` charged per preemption).
+
+    ``engine_variant`` pins the event-loop implementation (``"indexed"``
+    / ``"reference"``); ``None`` defers to ``REPRO_ENGINE`` (default
+    indexed).  Both produce byte-identical traces."""
     policy = _FixedTaskSetPolicy(
         taskset, alloc, np.random.default_rng(seed), release_jitter,
         worst_case, preemption=preemption,
         gpu_ctx_overhead=gpu_ctx_overhead,
     )
-    DiscreteEventEngine(policy, trace=trace).run(horizon)
+    DiscreteEventEngine(policy, trace=trace,
+                        variant=engine_variant).run(horizon)
     return SimResult(
         responses=policy.responses,
         misses=policy.misses,
@@ -258,9 +313,19 @@ class _ChurnPolicy(SchedulingPolicy):
     :meth:`DynamicController.job_boundary` reclaim the slices (the
     mode-change protocol).  Each job samples durations with the task
     parameters and slice count *committed at its release*, and is checked
-    against the analytic bound of that epoch."""
+    against the analytic bound of that epoch.
+
+    Incremental seam: one shared group; the priority order is the
+    controller's deadline-sorted :meth:`~DynamicController.order`, so a
+    capacity listener on the controller invalidates the engine's cached
+    sort on every committed mutation (admit, reclaim, boundary commit,
+    rate change).  Pending releases live in a lazily-invalidated heap of
+    ``(time, membership_seq, name)`` — the membership sequence number
+    reproduces the ``engine.jobs`` dict-insertion order the scan-based
+    path releases same-time jobs in."""
 
     horizon_slack = _EPS
+    incremental = True
 
     def __init__(
         self,
@@ -277,12 +342,26 @@ class _ChurnPolicy(SchedulingPolicy):
         self.pending = sorted(events, key=lambda e: (e.time, e.name))
         self.ev_idx = 0
         self.next_release: dict[str, float] = {}
+        self._release_heap: list = []
+        self._mseq: dict[str, int] = {}
+        self._seq = 0
         self.responses: dict[str, list[float]] = {}
         self.bounds: dict[str, list[float]] = {}
         self.misses: dict[str, int] = {}
         self.jobs_done: dict[str, int] = {}
         self.admitted: list[str] = []
         self.rejected: list[str] = []
+
+    def bind(self, engine: DiscreteEventEngine) -> None:
+        super().bind(engine)
+        # every committed controller mutation (admit, reclaim, boundary
+        # commit, update_rate) can reshuffle the deadline-sorted priority
+        # order — including out-of-band rate changes fired from trace
+        # subscribers (BoundMonitor re-admission callbacks)
+        self.controller.add_capacity_listener(self._on_capacity_change)
+
+    def _on_capacity_change(self) -> None:
+        self.order_changed(None)
 
     def gpu_arbitration(self) -> tuple[str, float]:
         # the runtime must execute the arbitration the controller certified
@@ -295,6 +374,8 @@ class _ChurnPolicy(SchedulingPolicy):
         if self.controller.job_boundary(name, t=now) == "reclaimed":
             self.engine.jobs.pop(name, None)
             self.next_release.pop(name, None)
+            self._mseq.pop(name, None)
+            self.membership_changed(name, added=False)
 
     def begin_step(self, now: float) -> None:
         eng = self.engine
@@ -311,6 +392,13 @@ class _ChurnPolicy(SchedulingPolicy):
                     self.admitted.append(ev.name)
                     eng.jobs[ev.name] = None
                     self.next_release[ev.name] = now
+                    self._mseq[ev.name] = self._seq
+                    self._seq += 1
+                    self.membership_changed(ev.name, added=True)
+                    heapq.heappush(
+                        self._release_heap,
+                        (now, self._mseq[ev.name], ev.name),
+                    )
                     # setdefault: a re-admission of a departed name must
                     # extend its history, not erase the first residency
                     self.responses.setdefault(ev.name, [])
@@ -332,6 +420,20 @@ class _ChurnPolicy(SchedulingPolicy):
             else:
                 raise ValueError(f"unknown churn event kind {ev.kind!r}")
 
+    def _release_one(self, name: str) -> None:
+        ctl = self.controller
+        task = ctl.task(name)
+        self.engine.start_job(name, EngineJob(
+            release=self.next_release[name],
+            deadline_abs=self.next_release[name] + task.deadline,
+            chain=task.chain(),
+            durations=_sample_durations(
+                task, 2 * ctl.allocation[name], self.rng,
+                self.worst_case,
+            ),
+            bound=ctl.bound(name),
+        ))
+
     def release_jobs(self, now: float) -> None:
         eng = self.engine
         ctl = self.controller
@@ -341,27 +443,64 @@ class _ChurnPolicy(SchedulingPolicy):
                 and not ctl.is_departing(name)
                 and self.next_release[name] <= now + _EPS
             ):
-                task = ctl.task(name)
-                eng.start_job(name, EngineJob(
-                    release=self.next_release[name],
-                    deadline_abs=self.next_release[name] + task.deadline,
-                    chain=task.chain(),
-                    durations=_sample_durations(
-                        task, 2 * ctl.allocation[name], self.rng,
-                        self.worst_case,
-                    ),
-                    bound=ctl.bound(name),
-                ))
+                self._release_one(name)
+
+    def _heap_entry_live(self, t: float, name: str) -> bool:
+        # an entry is live iff it matches the current schedule and the
+        # member is idle and not departing — anything else is a leftover
+        # from a superseded push (re-admission, completed release) and is
+        # dropped; a dropped entry can never become live again (departure
+        # is final for a name's residency, re-admission re-pushes)
+        return (
+            self.next_release.get(name) == t
+            and self.engine.jobs.get(name, False) is None
+            and not self.controller.is_departing(name)
+        )
+
+    def release_jobs_fast(self, now: float) -> None:
+        heap = self._release_heap
+        due = []
+        while heap and heap[0][0] <= now + _EPS:
+            t, s, name = heapq.heappop(heap)
+            if self._heap_entry_live(t, name):
+                due.append((s, name))
+        # membership-sequence order == jobs dict-insertion order == the
+        # order the scan-based path releases (and draws RNG for)
+        # same-time jobs
+        due.sort()
+        for _, name in due:
+            self._release_one(name)
 
     def arbitration_order(self) -> list:
         prio = {n: i for i, n in enumerate(self.controller.order())}
         return sorted(self.engine.jobs, key=lambda n: prio.get(n, len(prio)))
+
+    def resource_groups(self) -> list:
+        return [None]
+
+    def sort_group(self, group, keys: list) -> list:
+        prio = {n: i for i, n in enumerate(self.controller.order())}
+        keys.sort(key=lambda n: prio.get(n, len(prio)))
+        return keys
 
     def next_external_time(self, now: float) -> float:
         t = math.inf
         for name, job in self.engine.jobs.items():
             if job is None and not self.controller.is_departing(name):
                 t = min(t, self.next_release[name])
+        if self.ev_idx < len(self.pending):
+            t = min(t, self.pending[self.ev_idx].time)
+        return t
+
+    def next_external_time_fast(self, now: float) -> float:
+        t = math.inf
+        heap = self._release_heap
+        while heap:
+            tt, s, name = heap[0]
+            if self._heap_entry_live(tt, name):
+                t = tt
+                break
+            heapq.heappop(heap)
         if self.ev_idx < len(self.pending):
             t = min(t, self.pending[self.ev_idx].time)
         return t
@@ -385,6 +524,8 @@ class _ChurnPolicy(SchedulingPolicy):
                 if self.release_jitter else 0.0
             )
             self.next_release[key] = max(job.release + task.period + gap, now)
+            heapq.heappush(self._release_heap,
+                           (self.next_release[key], self._mseq[key], key))
 
 
 def simulate_churn(
@@ -401,6 +542,7 @@ def simulate_churn(
     preemption: str = "none",
     gpu_ctx_overhead: float = 0.0,
     monitor=None,
+    engine_variant: Optional[str] = None,
 ) -> ChurnSimResult:
     """Execute an admit/release churn trace under the online scheduler.
 
@@ -438,7 +580,8 @@ def simulate_churn(
         events, controller, np.random.default_rng(seed), release_jitter,
         worst_case,
     )
-    DiscreteEventEngine(policy, trace=trace).run(horizon)
+    DiscreteEventEngine(policy, trace=trace,
+                        variant=engine_variant).run(horizon)
     return ChurnSimResult(
         responses=policy.responses,
         bounds=policy.bounds,
@@ -480,9 +623,17 @@ class _FleetChurnPolicy(SchedulingPolicy):
     broker-admission / migration causality) exact.  Jobs sample durations
     with the slice count committed *on the host they run on*; a migration
     moves the member key — and its sporadic release schedule — from the
-    source lane to the target lane at the source job boundary."""
+    source lane to the target lane at the source job boundary.
+
+    Incremental seam: one group per host; a capacity listener on every
+    host controller (including elastically joined ones) invalidates that
+    host's cached priority sort on any committed mutation, so migrations
+    and rate changes dirty exactly the lanes they touch.  Pending
+    releases live in one fleet-wide lazily-invalidated heap of
+    ``(time, membership_seq, (host, name))``."""
 
     horizon_slack = _EPS
+    incremental = True
 
     def __init__(
         self,
@@ -506,6 +657,9 @@ class _FleetChurnPolicy(SchedulingPolicy):
         self.fl_idx = 0
         self.fleet_log: list[dict] = []
         self.next_release: dict[tuple, float] = {}
+        self._release_heap: list = []
+        self._mseq: dict[tuple, int] = {}
+        self._seq = 0
         self.responses: dict[str, list[float]] = {}
         self.bounds: dict[str, list[float]] = {}
         self.misses: dict[str, int] = {}
@@ -516,8 +670,38 @@ class _FleetChurnPolicy(SchedulingPolicy):
 
     # ---- engine hooks -------------------------------------------------------
 
+    def bind(self, engine: DiscreteEventEngine) -> None:
+        super().bind(engine)
+        for h in range(len(self.broker.hosts)):
+            self._listen_host(h)
+
+    def _listen_host(self, h: int) -> None:
+        # any committed mutation on host h (admit, reclaim, boundary
+        # commit, rate change — including migration legs) can reshuffle
+        # that lane's deadline-sorted priority order
+        self.broker.hosts[h].add_capacity_listener(
+            lambda h=h: self.order_changed(h)
+        )
+
     def resource_group(self, key):
         return key[0]
+
+    def resource_groups(self) -> list:
+        return list(range(len(self.broker.hosts)))
+
+    def sort_group(self, h, keys: list) -> list:
+        prio = {n: i for i, n in enumerate(self.broker.hosts[h].order())}
+        keys.sort(key=lambda k: prio.get(k[1], len(prio)))
+        return keys
+
+    def _track_member(self, key: tuple) -> None:
+        self._mseq[key] = self._seq
+        self._seq += 1
+        self.membership_changed(key, added=True)
+
+    def _untrack_member(self, key: tuple) -> None:
+        self._mseq.pop(key, None)
+        self.membership_changed(key, added=False)
 
     def display_name(self, key) -> str:
         return key[1]
@@ -532,16 +716,34 @@ class _FleetChurnPolicy(SchedulingPolicy):
 
     # ---- bookkeeping --------------------------------------------------------
 
-    def _lift_bounds(self) -> None:
-        """Raise every in-flight job's bound to its host's current R̂.
+    def _lift_bounds(self, hosts=None) -> None:
+        """Raise in-flight jobs' bounds to their host's current R̂.
 
         An admission or an in-migration changes a host's interference; the
         new epoch's bound is certified over the transitional set, so it
         covers jobs of either epoch — lifting keeps the per-job validation
-        sound for jobs spanning the reconfiguration."""
-        for (h, name), job in self.engine.jobs.items():
-            if job is not None:
-                job.bound = max(job.bound, self.broker.hosts[h].bound(name))
+        sound for jobs spanning the reconfiguration.
+
+        ``hosts`` narrows the lift to lanes whose certification actually
+        changed: admission is per-host transactional (the losing hosts'
+        state is untouched), so the admit path passes the one winning
+        host and the lift stays O(that host's residents) — without it,
+        filling a fleet to N residents costs O(N²) lifts.  ``None``
+        (reclaims, retires) lifts fleet-wide, since drain migrations can
+        cascade across lanes.  Either way ``max`` makes unaffected lanes
+        a no-op, so the narrowed lift is byte-identical."""
+        jobs = self.engine.jobs
+        if hosts is None:
+            for (h, name), job in jobs.items():
+                if job is not None:
+                    job.bound = max(job.bound,
+                                    self.broker.hosts[h].bound(name))
+            return
+        for h in hosts:
+            for name, b in self.broker.hosts[h].bounds().items():
+                job = jobs.get((h, name))
+                if job is not None and b > job.bound:
+                    job.bound = b
 
     def _boundary(self, name: str, now: float) -> str:
         """Job boundary on ``name``'s active host: reclaim a departer,
@@ -555,6 +757,7 @@ class _FleetChurnPolicy(SchedulingPolicy):
         if res == "reclaimed":
             self.engine.jobs.pop(key, None)
             self.next_release.pop(key, None)
+            self._untrack_member(key)
             # the departure may have started migrations; an idle source
             # is at its boundary NOW (mirrors the idle-departer reclaim)
             self._drain_idle_migrations(now)
@@ -562,9 +765,16 @@ class _FleetChurnPolicy(SchedulingPolicy):
         elif res == "migrated":
             nr = self.next_release.pop(key, now)
             self.engine.jobs.pop(key, None)
+            self._untrack_member(key)
             dst = self.broker.active_host(name)
             self.engine.jobs[(dst, name)] = None
             self.next_release[(dst, name)] = max(nr, now)
+            self._track_member((dst, name))
+            heapq.heappush(
+                self._release_heap,
+                (self.next_release[(dst, name)],
+                 self._mseq[(dst, name)], (dst, name)),
+            )
         return res
 
     def _drain_idle_migrations(self, now: float) -> None:
@@ -608,6 +818,9 @@ class _FleetChurnPolicy(SchedulingPolicy):
             h = self.broker.add_host(
                 gn_total=int(fe[2]), speed=speed, t=now
             )
+            self._listen_host(h)
+            # a new resource group: the engine's group index must grow
+            self.order_changed()
             self.fleet_log.append(
                 {"kind": "add", "host": h, "t": now, "ok": True}
             )
@@ -635,13 +848,18 @@ class _FleetChurnPolicy(SchedulingPolicy):
                 self.placements[ev.name] = h
                 eng.jobs[(h, ev.name)] = None
                 self.next_release[(h, ev.name)] = now
+                self._track_member((h, ev.name))
+                heapq.heappush(
+                    self._release_heap,
+                    (now, self._mseq[(h, ev.name)], (h, ev.name)),
+                )
                 # setdefault: a re-admission of a departed name must
                 # extend its history, not erase the first residency
                 self.responses.setdefault(ev.name, [])
                 self.bounds.setdefault(ev.name, [])
                 self.misses.setdefault(ev.name, 0)
                 self.jobs_done.setdefault(ev.name, 0)
-                self._lift_bounds()
+                self._lift_bounds(hosts=(h,))
             else:
                 self.rejected.append(ev.name)
         elif ev.kind == "release":
@@ -654,6 +872,21 @@ class _FleetChurnPolicy(SchedulingPolicy):
         else:
             raise ValueError(f"unknown churn event kind {ev.kind!r}")
 
+    def _release_one(self, key: tuple) -> None:
+        h, name = key
+        ctl = self.broker.hosts[h]
+        task = ctl.task(name)
+        self.engine.start_job(key, EngineJob(
+            release=self.next_release[key],
+            deadline_abs=self.next_release[key] + task.deadline,
+            chain=task.chain(),
+            durations=_sample_durations(
+                task, 2 * ctl.allocation[name], self.rng,
+                self.worst_case,
+            ),
+            bound=ctl.bound(name),
+        ))
+
     def release_jobs(self, now: float) -> None:
         eng = self.engine
         for key in list(eng.jobs):
@@ -664,17 +897,32 @@ class _FleetChurnPolicy(SchedulingPolicy):
                 and not ctl.is_departing(name)
                 and self.next_release.get(key, math.inf) <= now + _EPS
             ):
-                task = ctl.task(name)
-                eng.start_job(key, EngineJob(
-                    release=self.next_release[key],
-                    deadline_abs=self.next_release[key] + task.deadline,
-                    chain=task.chain(),
-                    durations=_sample_durations(
-                        task, 2 * ctl.allocation[name], self.rng,
-                        self.worst_case,
-                    ),
-                    bound=ctl.bound(name),
-                ))
+                self._release_one(key)
+
+    def _heap_entry_live(self, t: float, key: tuple) -> bool:
+        # mirror of the scan-based release/next-external predicate; stale
+        # entries (superseded by a migration, a departure, or a completed
+        # release) are dropped — a migration or re-admission pushes a
+        # fresh entry under the new key, so nothing is lost
+        h, name = key
+        return (
+            self.next_release.get(key) == t
+            and self.engine.jobs.get(key, False) is None
+            and not self.broker.hosts[h].is_departing(name)
+        )
+
+    def release_jobs_fast(self, now: float) -> None:
+        heap = self._release_heap
+        due = []
+        while heap and heap[0][0] <= now + _EPS:
+            t, s, key = heapq.heappop(heap)
+            if self._heap_entry_live(t, key):
+                due.append((s, key))
+        # membership-sequence order == jobs dict-insertion order == the
+        # scan-based release (and RNG draw) order for same-time jobs
+        due.sort()
+        for _, key in due:
+            self._release_one(key)
 
     def arbitration_order(self) -> list:
         out = []
@@ -691,6 +939,21 @@ class _FleetChurnPolicy(SchedulingPolicy):
             h, name = key
             if job is None and not self.broker.hosts[h].is_departing(name):
                 t = min(t, self.next_release.get(key, math.inf))
+        if self.ev_idx < len(self.pending):
+            t = min(t, self.pending[self.ev_idx].time)
+        if self.fl_idx < len(self.fleet_pending):
+            t = min(t, self.fleet_pending[self.fl_idx][0])
+        return t
+
+    def next_external_time_fast(self, now: float) -> float:
+        t = math.inf
+        heap = self._release_heap
+        while heap:
+            tt, s, key = heap[0]
+            if self._heap_entry_live(tt, key):
+                t = tt
+                break
+            heapq.heappop(heap)
         if self.ev_idx < len(self.pending):
             t = min(t, self.pending[self.ev_idx].time)
         if self.fl_idx < len(self.fleet_pending):
@@ -722,6 +985,11 @@ class _FleetChurnPolicy(SchedulingPolicy):
             self.next_release[(h2, name)] = max(
                 job.release + task.period + gap, now
             )
+            heapq.heappush(
+                self._release_heap,
+                (self.next_release[(h2, name)],
+                 self._mseq[(h2, name)], (h2, name)),
+            )
 
 
 def simulate_fleet(
@@ -744,6 +1012,7 @@ def simulate_fleet(
     host_speeds: Optional[Sequence[float]] = None,
     monitor=None,
     elastic: Sequence[tuple] = (),
+    engine_variant: Optional[str] = None,
 ) -> FleetSimResult:
     """Execute a churn trace across ``n_hosts`` broker-routed hosts.
 
@@ -797,7 +1066,8 @@ def simulate_fleet(
         events, broker, np.random.default_rng(seed), release_jitter,
         worst_case, elastic=elastic,
     )
-    DiscreteEventEngine(policy, trace=trace).run(horizon)
+    DiscreteEventEngine(policy, trace=trace,
+                        variant=engine_variant).run(horizon)
     return FleetSimResult(
         responses=policy.responses,
         bounds=policy.bounds,

@@ -728,6 +728,12 @@ class DynamicController:
         memo.flush_into(self._memo)
         self._trim_caches()
         self.epoch += 1
+        # a committed rate change re-deadlines the entry, which reorders
+        # the deadline-sorted priority list — capacity listeners now fire
+        # on *every* committed mutation (admit, reclaim, boundary commit,
+        # rate change), the completeness the runtime's incremental
+        # arbitration index relies on
+        self._notify_capacity()
         if self.trace is not None:
             extra = {}
             if metrics.enabled():
